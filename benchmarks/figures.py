@@ -1,0 +1,296 @@
+"""One benchmark per paper table/figure (§V).
+
+Each ``figN_*`` function returns a list of result rows and appends to the
+global CSV emitted by ``benchmarks.run`` in the required
+``name,us_per_call,derived`` format (us_per_call = simulated cycles at
+1 GHz in microseconds; derived = the figure's headline ratio).
+
+Container note (EXPERIMENTS.md §Method): OGB downloads are unavailable, so
+graphs are synthetic power-law matches of Table I scaled to ``MAX_EDGES``;
+the paper's qualitative claims are asserted by tests/test_simulator.py and
+quantified here.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import coo_to_scv_tiles, split_equal_nnz
+from repro.core.formats import COOMatrix
+from repro.simul import MachineConfig, geomean, load, simulate
+from repro.simul.datasets import TABLE_I
+
+MAX_EDGES = 250_000
+F_DEFAULT = 128
+DATASETS = list(TABLE_I)
+
+
+def _cat(name):
+    return TABLE_I[name].category
+
+
+def _sim_all(fmts, f=F_DEFAULT, datasets=DATASETS, **kw):
+    out = {}
+    for name in datasets:
+        g = load(name, max_edges=MAX_EDGES)
+        out[name] = {fmt: simulate(g.adj, f, fmt, **kw) for fmt in fmts}
+    return out
+
+
+def fig7_compute_cycles():
+    """Speedup in computation cycles (no memory stalls) of SCV over
+    CSC/CSR/MP.  Paper: 5.03x vs CSR ultra-sparse; 36% vs CSC."""
+    res = _sim_all(["csr", "csc", "mp", "scv_z"])
+    rows = []
+    for name, r in res.items():
+        for base in ["csc", "csr", "mp"]:
+            rows.append({
+                "figure": "fig7", "dataset": name, "category": _cat(name),
+                "baseline": base,
+                "cycles_scv": r["scv_z"].compute_cycles,
+                "speedup": r[base].compute_cycles / max(r["scv_z"].compute_cycles, 1),
+            })
+    for cat in ("ultra", "highly"):
+        for base in ["csc", "csr", "mp"]:
+            gs = geomean([x["speedup"] for x in rows
+                          if x["category"] == cat and x["baseline"] == base])
+            rows.append({"figure": "fig7", "dataset": f"geomean_{cat}",
+                         "category": cat, "baseline": base, "speedup": gs})
+    return rows
+
+
+def fig8_idle_cycles():
+    """Idle-cycle reduction vs CSR (paper: 327x ultra / 1.65x highly)."""
+    res = _sim_all(["csr", "scv_z"])
+    rows = []
+    for name, r in res.items():
+        rows.append({
+            "figure": "fig8", "dataset": name, "category": _cat(name),
+            "idle_csr": r["csr"].idle_cycles, "idle_scv": r["scv_z"].idle_cycles,
+            "reduction": r["csr"].idle_cycles / max(r["scv_z"].idle_cycles, 1.0),
+        })
+    for cat in ("ultra", "highly"):
+        rows.append({"figure": "fig8", "dataset": f"geomean_{cat}", "category": cat,
+                     "reduction": geomean([x["reduction"] for x in rows
+                                           if x.get("category") == cat])})
+    return rows
+
+
+def fig9_memory_traffic():
+    """Processor->cache traffic reduction of SCV/SCV-Z over CSC/CSR/MP
+    (paper: 4.37x CSR / 3.29x CSC on highly-sparse)."""
+    res = _sim_all(["csr", "csc", "mp", "scv", "scv_z"])
+    rows = []
+    for name, r in res.items():
+        for ours in ["scv", "scv_z"]:
+            for base in ["csc", "csr", "mp"]:
+                rows.append({
+                    "figure": "fig9", "dataset": name, "category": _cat(name),
+                    "ours": ours, "baseline": base,
+                    "reduction": r[base].traffic_bytes / max(r[ours].traffic_bytes, 1),
+                })
+    for cat in ("ultra", "highly"):
+        for base in ["csc", "csr"]:
+            rows.append({
+                "figure": "fig9", "dataset": f"geomean_{cat}", "category": cat,
+                "ours": "scv_z", "baseline": base,
+                "reduction": geomean([
+                    x["reduction"] for x in rows
+                    if x.get("ours") == "scv_z" and x.get("baseline") == base
+                    and x["category"] == cat and not x["dataset"].startswith("geomean")
+                ]),
+            })
+    return rows
+
+
+def fig10_mat():
+    """Mean DRAM access time improvement over CSR (paper: 2.48x highly)."""
+    res = _sim_all(["csr", "csc", "mp", "scv_z"])
+    rows = []
+    for name, r in res.items():
+        for fmt in ["csc", "mp", "scv_z"]:
+            rows.append({
+                "figure": "fig10", "dataset": name, "category": _cat(name),
+                "format": fmt, "mat": r[fmt].mat,
+                "improvement_vs_csr": r["csr"].mat / max(r[fmt].mat, 1e-9),
+            })
+    for cat in ("ultra", "highly"):
+        rows.append({"figure": "fig10", "dataset": f"geomean_{cat}", "category": cat,
+                     "format": "scv_z",
+                     "improvement_vs_csr": geomean([
+                         x["improvement_vs_csr"] for x in rows
+                         if x.get("format") == "scv_z" and x["category"] == cat
+                         and not x["dataset"].startswith("geomean")])})
+    return rows
+
+
+def fig11_overall():
+    """Overall speedup incl. memory stalls (paper: 7.96x/7.04x/6.51x
+    geomean over CSC/CSR/MP)."""
+    res = _sim_all(["csr", "csc", "mp", "scv_z"])
+    rows = []
+    for name, r in res.items():
+        for base in ["csc", "csr", "mp"]:
+            rows.append({
+                "figure": "fig11", "dataset": name, "category": _cat(name),
+                "baseline": base,
+                "total_scv_cycles": r["scv_z"].total_cycles,
+                "speedup": r[base].total_cycles / max(r["scv_z"].total_cycles, 1),
+            })
+    for base in ["csc", "csr", "mp"]:
+        rows.append({"figure": "fig11", "dataset": "geomean_all", "category": "all",
+                     "baseline": base,
+                     "speedup": geomean([x["speedup"] for x in rows
+                                         if x["baseline"] == base
+                                         and not x["dataset"].startswith("geomean")])})
+    return rows
+
+
+def fig12_height_sweep():
+    """SCV vector height 128..2048 vs 128 (paper: 512/1024 best)."""
+    rows = []
+    for name in ["arxiv", "pubmed", "cobuy_photo", "cobuy_computer", "citeseer"]:
+        g = load(name, max_edges=MAX_EDGES)
+        base = simulate(g.adj, F_DEFAULT, "scv_z", height=128).total_cycles
+        for h in [128, 256, 512, 1024, 2048]:
+            r = simulate(g.adj, F_DEFAULT, "scv_z", height=h)
+            rows.append({"figure": "fig12", "dataset": name, "height": h,
+                         "speedup_vs_128": base / max(r.total_cycles, 1)})
+    for h in [128, 256, 512, 1024, 2048]:
+        rows.append({"figure": "fig12", "dataset": "geomean", "height": h,
+                     "speedup_vs_128": geomean([x["speedup_vs_128"] for x in rows
+                                                if x.get("height") == h
+                                                and x["dataset"] != "geomean"])})
+    return rows
+
+
+def fig13_width_sweep():
+    """Tile width 1..64 (paper: width 1 wins; losses grow on ultra-sparse)."""
+    from repro.simul.dataflows import run_scv_width
+    from repro.simul.memory import finish_memory
+    from repro.simul.sim import DramConfig
+
+    cfg, dram = MachineConfig(), DramConfig()
+    rows = []
+    for name in ["arxiv", "citeseer", "cobuy_photo", "proteins"]:
+        g = load(name, max_edges=MAX_EDGES)
+        totals = {}
+        for w in [1, 2, 4, 8, 16, 32, 64]:
+            comp, traffic = run_scv_width(g.adj, F_DEFAULT, cfg, height=64, width=w)
+            mem = finish_memory(traffic, cfg, dram)
+            totals[w] = comp.cycles + mem.stall_cycles
+        for w, t in totals.items():
+            rows.append({"figure": "fig13", "dataset": name, "category": _cat(name),
+                         "width": w, "slowdown_vs_w1": t / totals[1]})
+    return rows
+
+
+def fig14_scalability():
+    """2..64 processors: Z-order equal-nnz split; merge overhead from
+    shared output tiles (paper: peak at 8-16 for ultra-sparse)."""
+    from repro.simul.dataflows import run_scv
+    from repro.simul.memory import DramConfig, finish_memory
+
+    cfg, dram = MachineConfig(), DramConfig()
+    rows = []
+    dram_bw_bytes_per_cycle = 16.0  # fixed DRAM bandwidth across P (paper)
+    for name in ["arxiv", "pubmed", "cobuy_photo", "reddit"]:
+        g = load(name, max_edges=MAX_EDGES)
+        tiles = coo_to_scv_tiles(g.adj, 512)
+
+        def run_parts(p):
+            part = split_equal_nnz(tiles, p)
+            comp_max, stall_max, dram_bytes, boundary_rows = 0.0, 0.0, 0.0, 0
+            seen_rows: dict[int, int] = {}
+            width = part.part_tiles.shape[1]
+            for i in range(p):
+                ids = part.part_tiles[i]
+                ids = ids[ids >= 0]
+                if len(ids) == 0:
+                    continue
+                sub = _subset_coo(tiles, ids, g.adj.shape)
+                comp, traffic = run_scv(sub, F_DEFAULT, cfg, height=512)
+                mem = finish_memory(traffic, cfg, dram)
+                comp_max = max(comp_max, comp.cycles)
+                stall_max = max(stall_max, mem.stall_cycles)
+                dram_bytes += mem.dram_bytes
+                for r in np.unique(tiles.tile_row[ids]):
+                    seen_rows[r] = seen_rows.get(r, 0) + 1
+            merges = sum(v - 1 for v in seen_rows.values())
+            merge_cycles = merges * 512 * (F_DEFAULT / cfg.n_pe + 2)
+            dram_cycles = dram_bytes / dram_bw_bytes_per_cycle / max(p, 1)
+            total = comp_max + stall_max + dram_cycles
+            return total + merge_cycles, total
+        t1, _ = run_parts(1)
+        for p in [2, 4, 8, 16, 32, 64]:
+            tp, tp_nomerge = run_parts(p)
+            rows.append({"figure": "fig14", "dataset": name, "category": _cat(name),
+                         "processors": p, "speedup": t1 / tp,
+                         "speedup_no_merge": t1 / tp_nomerge})
+    return rows
+
+
+def _subset_coo(tiles, ids, shape):
+    T = tiles.tile
+    rows = (tiles.tile_row[ids, None].astype(np.int64) * T + tiles.rows[ids]).ravel()
+    cols = (tiles.tile_col[ids, None].astype(np.int64) * T + tiles.cols[ids]).ravel()
+    vals = tiles.vals[ids].ravel()
+    keep = (np.arange(tiles.cap)[None] < tiles.nnz_in_tile[ids, None]).ravel()
+    return COOMatrix(rows[keep].astype(np.int32), cols[keep].astype(np.int32),
+                     vals[keep], shape)
+
+
+def fig15_bcsr_blocks():
+    """SCV-Z speedup over BCSR at block sizes 4..64."""
+    rows = []
+    for name in ["arxiv", "citeseer", "cobuy_photo"]:
+        g = load(name, max_edges=MAX_EDGES)
+        scv = simulate(g.adj, F_DEFAULT, "scv_z").total_cycles
+        for blk in [4, 8, 16, 32, 64]:
+            b = simulate(g.adj, F_DEFAULT, "bcsr", block=blk).total_cycles
+            rows.append({"figure": "fig15", "dataset": name, "category": _cat(name),
+                         "block": blk, "speedup": b / max(scv, 1)})
+    return rows
+
+
+def fig16_accelerators():
+    """vs GPU (BCSR-16), AWB-GCN (CSC + ideal balancing), GCNAX (CSR +
+    loop-reordered reuse).  Paper: 68.5x / 8.2x / 8.1x geomean.  These are
+    processing-order emulations, as in the paper ("we emulate the function
+    of the other accelerators to the best of our ability")."""
+    rows = []
+    for name in DATASETS:
+        g = load(name, max_edges=MAX_EDGES)
+        scv = simulate(g.adj, F_DEFAULT, "scv_z").total_cycles
+        gpu = simulate(g.adj, F_DEFAULT, "bcsr", block=16).total_cycles
+        csc = simulate(g.adj, F_DEFAULT, "csc")
+        awb = csc.compute.busy / csc.compute.busy * (
+            csc.compute.busy / MachineConfig().n_vpe + csc.memory.stall_cycles
+        )  # ideal balance: busy/n_vpe compute + CSC memory behaviour
+        csr = simulate(g.adj, F_DEFAULT, "csr")
+        gcnax = csr.compute.busy / MachineConfig().n_vpe + csr.memory.stall_cycles / 2
+        for base, cyc in [("gpu_bcsr16", gpu), ("awb_gcn", awb), ("gcnax", gcnax)]:
+            rows.append({"figure": "fig16", "dataset": name, "category": _cat(name),
+                         "baseline": base, "speedup": cyc / max(scv, 1)})
+    for base in ["gpu_bcsr16", "awb_gcn", "gcnax"]:
+        rows.append({"figure": "fig16", "dataset": "geomean_all", "category": "all",
+                     "baseline": base,
+                     "speedup": geomean([x["speedup"] for x in rows
+                                         if x["baseline"] == base
+                                         and not x["dataset"].startswith("geomean")])})
+    return rows
+
+
+ALL_FIGURES = {
+    "fig7": fig7_compute_cycles,
+    "fig8": fig8_idle_cycles,
+    "fig9": fig9_memory_traffic,
+    "fig10": fig10_mat,
+    "fig11": fig11_overall,
+    "fig12": fig12_height_sweep,
+    "fig13": fig13_width_sweep,
+    "fig14": fig14_scalability,
+    "fig15": fig15_bcsr_blocks,
+    "fig16": fig16_accelerators,
+}

@@ -1,0 +1,113 @@
+"""SCV Pallas-kernel roofline + hillclimb (EXPERIMENTS.md §Perf cell K).
+
+The TPU kernel cannot be Mosaic-compiled in this CPU container, so its
+roofline is derived structurally from the tile layout — the same
+quantities the BlockSpecs move:
+
+  A bytes   = entry payloads (val f32 + 2 x i32 locals, padded to cap)
+  Z bytes   = one (T x F) block per tile *minus* Pallas's skip-refetch when
+              consecutive tiles share a column block (the SCV reuse the
+              paper's Fig. 2(d) arrow shows) — plus cross-row reuse counted
+              with a 16 MiB VMEM-resident window model
+  PS bytes  = one (T x F) f32 strip write per PS block-row visit
+  FLOPs     = 2 x nnz x F (useful) ; MXU-densified tiles pay 2 x T^2 x F
+
+Hybrid dense-tile selection (beyond-paper, DESIGN.md §2): a tile is
+cheaper on the MXU than on the VPU gather-FMA path when
+
+  T*T*F / MXU_rate  <  nnz * F / VPU_rate   =>   nnz > T^2 * VPU/MXU
+
+(v5e: MXU 16384 MAC/cycle, VPU 1024 FMA-lane/cycle => nnz > T^2/16).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import coo_to_scv_tiles
+from repro.core.scv import ROW_MAJOR, ZMORTON
+from repro.simul.datasets import gcn_normalize, load, powerlaw_graph
+
+HBM_BW = 819e9
+PEAK = 197e12
+MXU_RATE = 128 * 128  # MACs/cycle
+VPU_RATE = 8 * 128  # FMA lanes/cycle
+
+
+def kernel_traffic(tiles, f: int, vmem_mb: float = 16.0):
+    """Returns dict of byte/flop terms for one aggregation pass."""
+    T, cap, nt = tiles.tile, tiles.cap, tiles.n_tiles
+    a_bytes = nt * cap * (4 + 4 + 4)  # vals + rows + cols (padded, static)
+    z_block = T * f * 4
+    # Pallas skips the Z copy when the next tile's index map is unchanged;
+    # beyond that, a VMEM-window model: a Z block is re-fetched only if not
+    # among the last W distinct blocks (double-buffered working set)
+    w = max(1, int(vmem_mb * 2**20 * 0.5 // z_block))
+    recent: dict[int, int] = {}
+    fetches = 0
+    for i, c in enumerate(tiles.tile_col):
+        c = int(c)
+        if c not in recent or i - recent[c] > w:
+            fetches += 1
+        recent[c] = i
+    z_bytes = fetches * z_block
+    n_strips = len(np.unique(tiles.tile_row))
+    ps_bytes = n_strips * T * f * 4
+    flops = 2.0 * tiles.nnz * f
+    return {
+        "a_bytes": a_bytes, "z_bytes": z_bytes, "ps_bytes": ps_bytes,
+        "total_bytes": a_bytes + z_bytes + ps_bytes,
+        "flops": flops, "n_tiles": nt, "cap": cap,
+        "pad_frac": tiles.padding_fraction,
+    }
+
+
+def hybrid_split(tiles, f: int):
+    """Beyond-paper: send dense-ish tiles to the MXU.  Density is judged
+    on LOGICAL tiles (cap-splitting merged back), since the MXU would
+    consume the whole T x T tile at once.  Returns (cycles before, cycles
+    after, fraction densified)."""
+    T = tiles.tile
+    key = tiles.tile_row.astype(np.int64) * (2**32) + tiles.tile_col
+    uniq, inv = np.unique(key, return_inverse=True)
+    nnz = np.zeros(len(uniq), np.int64)
+    np.add.at(nnz, inv, tiles.nnz_in_tile.astype(np.int64))
+    vpu_cycles = nnz * f / VPU_RATE
+    mxu_cycles = (T * T * f) / MXU_RATE * np.ones(len(uniq), dtype=float)
+    before = float(vpu_cycles.sum())
+    after = float(np.minimum(vpu_cycles, mxu_cycles).sum())
+    dense_frac = float((mxu_cycles < vpu_cycles).mean())
+    return before, after, dense_frac
+
+
+def main():
+    rows = []
+    print("dataset       T    cap   bytes(GB) AI(fl/B) t_mem(ms) pad%  | hybrid: VPU-cyc  mix-cyc  dense%")
+    for name in ["arxiv", "cobuy_photo", "proteins"]:
+        g = load(name, max_edges=250_000)
+        f = 128
+        best = None
+        for T in [32, 64, 128, 256, 512]:
+            tiles = coo_to_scv_tiles(g.adj, T)
+            k = kernel_traffic(tiles, f)
+            b4, aft, dfrac = hybrid_split(tiles, f)
+            t_mem = k["total_bytes"] / HBM_BW * 1e3
+            row = dict(dataset=name, T=T, **k, t_mem_ms=t_mem,
+                       vpu_cycles=b4, hybrid_cycles=aft, dense_frac=dfrac)
+            rows.append(row)
+            print(f"{name:12s} {T:4d} {k['cap']:5d} {k['total_bytes']/1e9:9.3f} "
+                  f"{k['flops']/k['total_bytes']:8.2f} {t_mem:8.3f} "
+                  f"{100*k['pad_frac']:4.0f}  | {b4:12.0f} {aft:8.0f} {100*dfrac:5.1f}%")
+            if best is None or k["total_bytes"] < best[1]:
+                best = (T, k["total_bytes"])
+        print(f"  -> best tile for {name}: T={best[0]}")
+        # order ablation: row-major vs zmorton at best T
+        for order in (ROW_MAJOR, ZMORTON):
+            tiles = coo_to_scv_tiles(g.adj, best[0], order=order)
+            k = kernel_traffic(tiles, f)
+            print(f"  order={order:9s}: z_bytes={k['z_bytes']/1e9:.3f}GB "
+                  f"total={k['total_bytes']/1e9:.3f}GB")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / (links x link_bw)
+
+HLO flops/bytes come from the trip-count-corrected analyzer
+(launch/hlocost.py).  MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for
+train (2*N*D for single-forward shapes) gives the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+
+# TPU v5e per-chip constants (task spec)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_LINK_BW = 50e9  # bytes/s per link
+ICI_LINKS = 2  # concurrent links per 2-D torus axis pair (stated in table)
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 1 * 128,
+    "long_500k": 1 * 1,
+}
+TRAIN_MULT = {"train_4k": 6}  # fwd+bwd; serve shapes use 2*N*D per token
+
+
+def model_flops(row: dict) -> float:
+    tokens = SHAPE_TOKENS[row["shape"]]
+    n = row["n_active_params"]
+    mult = TRAIN_MULT.get(row["shape"], 2)
+    return float(mult) * n * tokens
+
+
+def roofline_row(row: dict, n_chips: int = 256) -> dict:
+    t_comp = row["flops_per_device"] / PEAK_FLOPS
+    t_mem = row["bytes_per_device"] / HBM_BW
+    coll = sum(row["collective_bytes_per_device"].values())
+    t_coll = coll / (ICI_LINKS * ICI_LINK_BW)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(row)
+    hlo_total = row["flops_per_device"] * n_chips
+    return {
+        "arch": row["arch"],
+        "shape": row["shape"],
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_flop_ratio": mf / hlo_total if hlo_total else 0.0,
+        # achievable fraction of the compute roofline if the dominant term
+        # were fully overlapped elsewhere: T_ideal_compute / T_bound
+        "roofline_fraction": t_comp / max(terms.values()) if max(terms.values()) else 0.0,
+        "fits_hbm": (row["memory"]["temp_bytes"] + row["memory"]["argument_bytes"])
+        <= 16 * 1024**3,
+        "hbm_gb": (row["memory"]["temp_bytes"] + row["memory"]["argument_bytes"]) / 1e9,
+    }
+
+
+def build_table(path: str, n_chips: int = 256) -> list[dict]:
+    rows = json.load(open(path))
+    return [roofline_row(r, n_chips) for r in rows if r.get("status") == "ok"]
+
+
+def format_table(table: list[dict]) -> str:
+    hdr = (
+        f"{'arch':18s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} "
+        f"{'bound':>7s} {'useful':>7s} {'roofl%':>7s} {'HBM GB':>7s} fits"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in table:
+        lines.append(
+            f"{r['arch']:18s} {r['shape']:12s} {r['t_compute_s']:9.2e} "
+            f"{r['t_memory_s']:9.2e} {r['t_collective_s']:9.2e} "
+            f"{r['bottleneck'][:7]:>7s} {r['useful_flop_ratio']:7.2f} "
+            f"{100*r['roofline_fraction']:6.1f}% {r['hbm_gb']:7.1f} "
+            f"{'Y' if r['fits_hbm'] else 'N'}"
+        )
+    return "\n".join(lines)
+
+
+def main(path="results/dryrun_single_pod.json"):
+    table = build_table(path)
+    print(format_table(table))
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Benchmark harness: one function per paper table/figure (+ kernel
+microbench and the dry-run roofline table when artifacts exist).
+
+Prints ``name,us_per_call,derived`` CSV rows (simulated cycles at 1 GHz ->
+us) and writes the full row dumps to results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def _kernel_microbench():
+    """Wall-clock of the SCV aggregation backends on CPU (relative numbers
+    only — the TPU path is characterized by the dry-run roofline)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import coo_to_scv_tiles, coo_to_csr
+    from repro.core.aggregate import (aggregate, aggregate_scv_tiles,
+                                      scv_device_arrays)
+    from repro.simul.datasets import gcn_normalize, powerlaw_graph
+
+    adj = gcn_normalize(powerlaw_graph(20_000, 100_000, seed=0))
+    f = 128
+    z = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (adj.shape[1], f)).astype(np.float32))
+    rows = []
+    tiles = coo_to_scv_tiles(adj, 64)
+    csr = coo_to_csr(adj)
+
+    def timeit(fn, n=5):
+        fn().block_until_ready()
+        t0 = time.time()
+        for _ in range(n):
+            out = fn()
+        out.block_until_ready()
+        return (time.time() - t0) / n * 1e6
+
+    t_scv = timeit(lambda: aggregate_scv_tiles(tiles, z, backend="jnp"))
+    t_csr = timeit(lambda: aggregate(csr, z))
+    rows.append({"figure": "kernel", "name": "scv_jnp_cpu", "us_per_call": t_scv,
+                 "derived": f"csr/scv={t_csr/t_scv:.2f}"})
+    rows.append({"figure": "kernel", "name": "csr_segsum_cpu", "us_per_call": t_csr,
+                 "derived": ""})
+    return rows
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from benchmarks.figures import ALL_FIGURES
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name, fn in ALL_FIGURES.items():
+        if only and only not in (name,):
+            continue
+        t0 = time.time()
+        rows = fn()
+        dt = time.time() - t0
+        all_rows.extend(rows)
+        # emit the headline geomean rows as CSV
+        for r in rows:
+            if str(r.get("dataset", "")).startswith("geomean"):
+                key = [str(r.get(k)) for k in ("baseline", "ours", "height", "width",
+                                               "processors", "format", "block")
+                       if r.get(k) is not None]
+                metric = next((r[k] for k in ("speedup", "reduction",
+                                              "improvement_vs_csr",
+                                              "speedup_vs_128", "slowdown_vs_w1")
+                               if k in r), "")
+                us = r.get("total_scv_cycles", r.get("cycles_scv", ""))
+                us = f"{us/1e3:.1f}" if us else ""
+                print(f"{name}:{r['dataset']}:{':'.join(key)},{us},{metric:.3f}"
+                      if metric != "" else f"{name}:{r['dataset']},{us},")
+        print(f"# {name} done in {dt:.1f}s ({len(rows)} rows)", flush=True)
+
+    if only is None or only == "kernel":
+        for r in _kernel_microbench():
+            print(f"{r['figure']}:{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+            all_rows.append(r)
+
+    if only is None or only == "kernel_roofline":
+        from benchmarks.kernel_roofline import main as kr_main
+
+        print("# SCV kernel roofline / hybrid analysis (EXPERIMENTS §Perf cell K)")
+        kr_rows = kr_main()
+        all_rows.extend({"figure": "kernel_roofline", **r} for r in kr_rows)
+
+    # roofline table from dry-run artifacts, if present
+    path = "results/dryrun_single_pod.json"
+    if (only is None or only == "roofline") and os.path.exists(path):
+        from benchmarks.roofline import build_table, format_table
+
+        table = build_table(path)
+        print(format_table(table))
+        for r in table:
+            print(f"roofline:{r['arch']}:{r['shape']},,"
+                  f"{r['bottleneck']}:{100*r['roofline_fraction']:.1f}%")
+        all_rows.extend({"figure": "roofline", **r} for r in table)
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as fh:
+        json.dump(all_rows, fh, indent=1, default=str)
+    print(f"# wrote results/benchmarks.json ({len(all_rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""GNN inference across aggregation backends — the paper's workload.
+
+Runs a 2-layer GCN (and GAT) over a synthetic power-law graph with the
+CSR baseline and the SCV kernel backends, timing CPU wall-clock and
+verifying numerical equivalence.
+
+    PYTHONPATH=src python examples/gnn_inference.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn import GNNConfig, build_graph, gnn_forward, init_gnn
+from repro.simul.datasets import gcn_normalize, load
+
+# citeseer-scale: pallas interpret mode executes the kernel body per grid
+# step in Python, so the demo graph stays small (the TPU path is compiled)
+g_data = load("citeseer", max_edges=40_000)
+graph = build_graph(g_data.adj, tile=128)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((g_data.adj.shape[0], 64)), jnp.float32)
+
+for kind in ["gcn"]:
+    cfg_jnp = GNNConfig(name=kind, kind=kind, d_in=64, d_hidden=64, n_classes=16,
+                        backend="jnp")
+    cfg_pls = GNNConfig(name=kind, kind=kind, d_in=64, d_hidden=64, n_classes=16,
+                        backend="pallas_interpret")
+    params, _ = init_gnn(jax.random.PRNGKey(0), cfg_jnp)
+    f_jnp = jax.jit(lambda p, xx: gnn_forward(p, cfg_jnp, graph, xx))
+    out_j = f_jnp(params, x).block_until_ready()
+    t0 = time.time()
+    out_j = f_jnp(params, x).block_until_ready()
+    t_jnp = time.time() - t0
+    out_p = gnn_forward(params, cfg_pls, graph, x)
+    err = float(jnp.abs(out_j - out_p).max())
+    print(f"{kind}: jnp {t_jnp*1e3:.1f} ms/inference, pallas-interpret matches to {err:.2e}")
+
+# GAT on the jnp backend (per-edge attention re-weighting through SCV)
+cfg_gat = GNNConfig(name="gat", kind="gat", d_in=64, d_hidden=64, n_classes=16,
+                    backend="jnp")
+params, _ = init_gnn(jax.random.PRNGKey(1), cfg_gat)
+out = gnn_forward(params, cfg_gat, graph, x)
+print(f"gat: output {out.shape}, finite={bool(jnp.isfinite(out).all())}")
+print("OK")

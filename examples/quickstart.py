@@ -1,0 +1,34 @@
+"""Quickstart: the paper's technique in 30 lines.
+
+Builds a GCN-normalized synthetic citation graph (Table-I citeseer
+statistics), converts the adjacency to the SCV-Z format, and runs the
+aggregation through the Pallas kernel (interpret mode on CPU), checking
+against the dense oracle.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coo_to_scv, coo_to_scv_tiles, ZMORTON, aggregate
+from repro.simul.datasets import gcn_normalize, load
+
+g = load("citeseer", max_edges=50_000)  # synthetic, Table-I statistics
+print(f"graph: {g.adj.shape[0]} nodes, {g.adj.nnz} edges "
+      f"(density {g.adj.density:.2e}), scale={g.scale:.2f} vs Table I")
+
+# 1. the paper's logical format (Fig. 1(d))
+scv = coo_to_scv(g.adj, vector_height=512, order=ZMORTON)
+print(f"SCV-Z: {scv.n_vectors} column vectors of height {scv.vector_height}, "
+      f"{scv.index_bits_per_entry} index bits/entry (vs {int(np.ceil(np.log2(g.adj.shape[0])))} for COO)")
+
+# 2. the TPU tile layout + Pallas kernel
+tiles = coo_to_scv_tiles(g.adj, tile=64)
+z = jnp.asarray(np.random.default_rng(0).standard_normal(
+    (g.adj.shape[1], 64)).astype(np.float32))
+out = aggregate(tiles, z, backend="pallas_interpret")
+
+# 3. check against the dense oracle
+ref = jnp.asarray(g.adj.to_dense()) @ z
+print(f"aggregation max err vs dense oracle: {float(jnp.abs(out - ref).max()):.2e}")
+print("OK")

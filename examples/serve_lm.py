@@ -1,0 +1,15 @@
+"""Batched serving example: submit a queue of requests against a reduced
+LM and stream greedy continuations through the ServeEngine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod
+
+serve_mod.main([
+    "--arch", "gemma2-27b", "--requests", "12", "--prompt-len", "16",
+    "--max-new", "12", "--max-batch", "4",
+])

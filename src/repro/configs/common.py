@@ -1,0 +1,344 @@
+"""Architecture registry machinery.
+
+Each ``configs/<arch>.py`` exports ``spec: ArchSpec``.  An ArchSpec binds
+a model family (lm / mamba_lm / hybrid / encdec) to its full-size config,
+a reduced same-family config for CPU smoke tests, and the set of
+applicable input shapes.  ``steps()`` returns uniform jit-able step
+functions; ``input_specs()`` returns ShapeDtypeStruct stand-ins so the
+multi-pod dry-run lowers without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adam import AdamConfig, adam_update, init_adam
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    kind: str  # "lm" | "mamba_lm" | "hybrid" | "encdec"
+    config: Any
+    reduced: Any
+    shapes: tuple = ("train_4k", "prefill_32k", "decode_32k")
+    skip_notes: str = ""
+    uses_paper_technique: bool = False  # SCV-sorted MoE dispatch
+    train_microbatch: int = 1  # grad-accumulation splits (activation memory)
+    master_weights: bool = False  # bf16 params + f32 master in opt state
+
+    def cfg(self, reduced=False):
+        return self.reduced if reduced else self.config
+
+    # -- family dispatch ---------------------------------------------------
+    def init(self, key, reduced=False):
+        cfg = self.cfg(reduced)
+        if self.kind == "lm":
+            from repro.models.transformer import init_lm
+
+            return init_lm(key, cfg)
+        if self.kind == "mamba_lm":
+            from repro.models.ssm import init_mamba2_lm
+
+            return init_mamba2_lm(key, cfg)
+        if self.kind == "hybrid":
+            from repro.models.hybrid import init_hybrid
+
+            return init_hybrid(key, cfg)
+        if self.kind == "encdec":
+            from repro.models.encdec import init_encdec
+
+            return init_encdec(key, cfg)
+        raise ValueError(self.kind)
+
+    def loss_fn(self, reduced=False) -> Callable:
+        cfg = self.cfg(reduced)
+        if self.kind == "lm":
+            from repro.models.transformer import train_loss
+
+            return lambda p, batch: train_loss(p, cfg, batch)
+        if self.kind == "mamba_lm":
+            from repro.models.ssm import mamba2_lm_loss
+
+            return lambda p, batch: mamba2_lm_loss(p, cfg, batch)
+        if self.kind == "hybrid":
+            from repro.models.hybrid import train_loss
+
+            return lambda p, batch: train_loss(p, cfg, batch)
+        if self.kind == "encdec":
+            from repro.models.encdec import train_loss
+
+            return lambda p, batch: train_loss(p, cfg, batch)
+        raise ValueError(self.kind)
+
+    def make_train_step(self, adam_cfg: AdamConfig | None = None, reduced=False,
+                        microbatch: int | None = None,
+                        gather_params_once: bool | None = None):
+        """Train step with optional gradient accumulation: the global batch
+        is split into ``microbatch`` slices scanned sequentially (activation
+        memory scales 1/microbatch; grads accumulate in the param-sharded
+        f32 buffer), then one Adam update runs.
+
+        gather_params_once: with fsdp-sharded params, every microbatch
+        would re-all-gather the weights; hoisting one explicit un-fsdp
+        constraint before the scan trades +params/TP-shards bytes of HBM
+        for a 1/microbatch reduction in all-gather traffic (§Perf)."""
+        adam_cfg = adam_cfg or AdamConfig()
+        loss_fn = self.loss_fn(reduced)
+        k = microbatch if microbatch is not None else (
+            1 if reduced else self.train_microbatch
+        )
+        # gather-once measured: -10% collectives but +16 GB temp on qwen
+        # (the un-fsdp'd grads materialize before re-sharding) — opt-in only
+        # (EXPERIMENTS.md §Perf Cell B iter 3)
+        gather_once = bool(gather_params_once)
+        axes_tree = self.init(jax.random.PRNGKey(0), reduced=True)[1] if gather_once else None
+
+        def train_step(params, opt_state, batch):
+            if k == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                from repro.train.sharding import unfsdp_params
+
+                params_used = (
+                    unfsdp_params(params, axes_tree) if gather_once else params
+                )
+                mb = jax.tree.map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch
+                )
+
+                def acc_step(carry, b):
+                    loss_acc, g_acc = carry
+                    l, g = jax.value_and_grad(loss_fn)(params_used, b)
+                    if gather_once:
+                        # grads of the gathered params are un-fsdp'd; pin
+                        # them back to the param sharding so the f32
+                        # accumulator stays fully sharded
+                        from repro.train.sharding import refsdp_params
+
+                        g = refsdp_params(g, axes_tree)
+                    g_acc = jax.tree.map(
+                        lambda a, gg: a + gg.astype(jnp.float32) / k, g_acc, g
+                    )
+                    return (loss_acc + l / k, g_acc), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                (loss, grads), _ = jax.lax.scan(
+                    acc_step, (jnp.zeros((), jnp.float32), zeros), mb
+                )
+            params, opt_state, metrics = adam_update(adam_cfg, params, grads, opt_state)
+            return params, opt_state, {"loss": loss, **metrics}
+
+        return train_step
+
+    def make_prefill_step(self, shape: Shape, reduced=False):
+        cfg = self.cfg(reduced)
+        S = shape.seq_len if not reduced else min(shape.seq_len, 64)
+        if self.kind == "lm":
+            from repro.models.transformer import prefill
+
+            def step(params, batch):
+                return prefill(params, cfg, batch["tokens"], extra_embed=batch.get("extra_embed"), max_len=S)
+
+        elif self.kind == "mamba_lm":
+            from repro.models.layers import unembed_logits
+            from repro.models.ssm import mamba2_lm_hidden
+
+            def step(params, batch):
+                x, _ = mamba2_lm_hidden(params, cfg, batch["tokens"])
+                return unembed_logits(params["embed"], x[:, -1:], true_vocab=cfg.vocab)
+
+        elif self.kind == "hybrid":
+            from repro.models.hybrid import hidden_states
+            from repro.models.layers import unembed_logits
+
+            def step(params, batch):
+                x, _ = hidden_states(params, cfg, batch["tokens"])
+                return unembed_logits(params["embed"], x[:, -1:], true_vocab=cfg.vocab)
+
+        elif self.kind == "encdec":
+            from repro.models.encdec import encode, init_dec_cache
+
+            def step(params, batch):
+                enc = encode(params, cfg, batch["frames"])
+                return init_dec_cache(params, cfg, enc, max_len=8)
+
+        else:
+            raise ValueError(self.kind)
+        return step
+
+    def make_decode_step(self, shape: Shape, reduced=False):
+        cfg = self.cfg(reduced)
+        if self.kind == "lm":
+            from repro.models.transformer import decode_step
+
+            def step(params, state, batch):
+                return decode_step(params, cfg, batch["token"], state, batch["pos"])
+
+        elif self.kind == "mamba_lm":
+            from repro.models.ssm import mamba2_lm_decode
+
+            def step(params, state, batch):
+                return mamba2_lm_decode(params, cfg, batch["token"], state)
+
+        elif self.kind == "hybrid":
+            from repro.models.hybrid import decode_step
+
+            def step(params, state, batch):
+                return decode_step(params, cfg, batch["token"], state, batch["pos"])
+
+        elif self.kind == "encdec":
+            from repro.models.encdec import decode_step
+
+            def step(params, state, batch):
+                return decode_step(params, cfg, batch["token"], state, batch["pos"])
+
+        else:
+            raise ValueError(self.kind)
+        return step
+
+    # -- abstract inputs -----------------------------------------------------
+    def input_specs(self, shape_name: str, reduced=False) -> dict:
+        """ShapeDtypeStruct batch for the given shape (weak-type-correct,
+        shardable, no allocation)."""
+        shape = SHAPES[shape_name]
+        cfg = self.cfg(reduced)
+        B = shape.global_batch if not reduced else 2
+        S = shape.seq_len if not reduced else min(shape.seq_len, 64)
+        i32, f32 = jnp.int32, jnp.float32
+        d = getattr(cfg, "d_model")
+        if shape.kind == "train":
+            if self.kind == "encdec":
+                return {
+                    "frames": jax.ShapeDtypeStruct((B, S, d), f32),
+                    "tokens": jax.ShapeDtypeStruct((B, S + 1), i32),
+                }
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S + 1), i32)}
+            nfront = getattr(cfg, "n_frontend_tokens", 0)
+            if nfront:
+                batch["tokens"] = jax.ShapeDtypeStruct((B, S - nfront + 1), i32)
+                batch["extra_embed"] = jax.ShapeDtypeStruct((B, nfront, d), f32)
+            return batch
+        if shape.kind == "prefill":
+            if self.kind == "encdec":
+                return {"frames": jax.ShapeDtypeStruct((B, S, d), f32)}
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            nfront = getattr(cfg, "n_frontend_tokens", 0)
+            if nfront:
+                batch["tokens"] = jax.ShapeDtypeStruct((B, S - nfront), i32)
+                batch["extra_embed"] = jax.ShapeDtypeStruct((B, nfront, d), f32)
+            return batch
+        # decode
+        return {
+            "token": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((B, 1), i32),
+        }
+
+    def state_specs(self, shape_name: str, reduced=False):
+        """(shape_tree, axes_tree) for decode-time state, abstract."""
+        shape = SHAPES[shape_name]
+        cfg = self.cfg(reduced)
+        B = shape.global_batch if not reduced else 2
+        S = shape.seq_len if not reduced else min(shape.seq_len, 64)
+        if self.kind == "lm":
+            from repro.models.transformer import cache_specs, init_cache
+
+            shapes = jax.eval_shape(lambda: init_cache(cfg, B, S))
+            return shapes, cache_specs(cfg)
+        if self.kind == "mamba_lm":
+            from repro.models.ssm import init_mamba2_lm_state, mamba2_lm_state_specs
+
+            shapes = jax.eval_shape(lambda: init_mamba2_lm_state(cfg, B))
+            return shapes, mamba2_lm_state_specs(cfg)
+        if self.kind == "hybrid":
+            from repro.models.hybrid import init_state, state_specs
+
+            shapes = jax.eval_shape(lambda: init_state(cfg, B, S))
+            return shapes, state_specs(cfg)
+        if self.kind == "encdec":
+            from repro.models.encdec import cache_specs as ed_specs
+
+            H, D = cfg.n_heads, cfg.head_dim
+            L_ = cfg.n_layers
+            dt = cfg.dtype
+            shapes = {
+                "k": jax.ShapeDtypeStruct((L_, B, S, H, D), dt),
+                "v": jax.ShapeDtypeStruct((L_, B, S, H, D), dt),
+                "pos": jax.ShapeDtypeStruct((L_, S), jnp.int32),
+                "len": jax.ShapeDtypeStruct((L_,), jnp.int32),
+                "xk": jax.ShapeDtypeStruct((L_, B, S, H, D), dt),
+                "xv": jax.ShapeDtypeStruct((L_, B, S, H, D), dt),
+            }
+            return shapes, ed_specs(cfg)
+        raise ValueError(self.kind)
+
+    def param_count(self, reduced=False) -> int:
+        shapes = jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0), reduced)[0])
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self, reduced=False) -> int:
+        cfg = self.cfg(reduced)
+        moe = getattr(cfg, "moe", None)
+        shapes = jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0), reduced)[0])
+        total = 0
+        for path, x in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            n = int(np.prod(x.shape))
+            keys = "/".join(str(getattr(k, "key", k)) for k in path)
+            if moe is not None and "moe" in keys and (
+                keys.endswith("wi") or keys.endswith("wg") or keys.endswith("wo")
+            ):
+                n = n * moe.top_k // moe.n_experts
+            total += n
+        return total
+
+
+def make_abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        tree,
+        is_leaf=lambda x: hasattr(x, "shape"),
+    )
+
+
+def abstract_opt_state(params_shapes, master_weights: bool = False):
+    f32 = lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32)
+    st = {
+        "m": jax.tree.map(f32, params_shapes),
+        "v": jax.tree.map(f32, params_shapes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if master_weights:
+        st["master"] = jax.tree.map(f32, params_shapes)
+    return st
+
+
+def bf16_params(params_shapes):
+    """bf16 compute-param tree (master_weights mode)."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, jnp.bfloat16 if x.dtype == jnp.float32 else x.dtype
+        ),
+        params_shapes,
+    )

@@ -1,0 +1,13 @@
+"""The paper's own model family: GCN on the Table-I graph suite, with SCV
+aggregation as the first-class backend.  Used by the paper-reproduction
+benchmarks and examples; not part of the 10-arch LM matrix."""
+from repro.configs.common import ArchSpec
+from repro.models.gnn import GNNConfig
+
+_full = GNNConfig(name="gcn-paper", kind="gcn", d_in=128, d_hidden=128,
+                  n_classes=40, n_layers=2, backend="pallas")
+_reduced = GNNConfig(name="gcn-paper-reduced", kind="gcn", d_in=16,
+                     d_hidden=32, n_classes=7, n_layers=2, backend="jnp")
+
+spec = ArchSpec(name="gcn-paper", kind="gnn", config=_full, reduced=_reduced,
+                shapes=(), uses_paper_technique=True)

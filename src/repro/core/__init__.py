@@ -1,0 +1,36 @@
+"""Core: the paper's contribution — SCV/SCV-Z sparse aggregation."""
+from repro.core.aggregate import (
+    aggregate,
+    aggregate_bcsr,
+    aggregate_coo_scatter,
+    aggregate_coo_segsum,
+    aggregate_dense,
+    aggregate_scv_tiles,
+)
+from repro.core.formats import (
+    BCSRMatrix,
+    COOMatrix,
+    CSBMatrix,
+    CSCMatrix,
+    CSRMatrix,
+    coo_from_dense,
+    coo_to_bcsr,
+    coo_to_csb,
+    coo_to_csc,
+    coo_to_csr,
+    csc_to_coo,
+    csr_to_coo,
+)
+from repro.core.morton import morton_decode, morton_encode, morton_order, zcurve_tiles
+from repro.core.partition import Partition, load_imbalance, shard_tiles, split_equal_nnz
+from repro.core.scv import (
+    ROW_MAJOR,
+    ZMORTON,
+    SCVMatrix,
+    SCVTiles,
+    coo_to_scv,
+    coo_to_scv_tiles,
+    scv_to_tiles,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

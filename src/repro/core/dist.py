@@ -1,0 +1,98 @@
+"""Distributed SCV aggregation over a device mesh (paper §V-G at scale).
+
+The Z-Morton curve is cut into equal-nnz spans (core/partition.py); each
+device aggregates its span into a local PS buffer with the SCV kernel (or
+the jnp reference), and boundary block-rows shared between spans are
+merged with a single ``psum`` — the collective realization of the paper's
+shared-memory PS merge.  The curve's locality means each span touches a
+narrow band of Z rows and PS strips, so per-device traffic stays local
+even though the code below keeps the dense Z replicated (graph features
+are small next to LM weights; Z-sharding is a further lever, noted in
+DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.partition import Partition, shard_tiles, split_equal_nnz
+from repro.core.scv import SCVTiles
+
+
+@dataclasses.dataclass
+class DistributedGraph:
+    """Tiles re-packed with a leading device axis for shard_map."""
+
+    arrays: dict  # each leaf: [n_devices, tiles_per_device, ...]
+    tile: int
+    n_rows_padded: int
+    n_rows: int
+    n_parts: int
+    imbalance: float
+
+
+def distribute_tiles(tiles: SCVTiles, n_parts: int) -> DistributedGraph:
+    part = split_equal_nnz(tiles, n_parts)
+    stacked = shard_tiles(tiles, part)
+    width = part.part_tiles.shape[1]
+
+    def dev(a):
+        return jnp.asarray(a.reshape((n_parts, width) + a.shape[1:]))
+
+    arrays = {
+        "tile_row": dev(stacked.tile_row),
+        "tile_col": dev(stacked.tile_col),
+        "rows": dev(stacked.rows),
+        "cols": dev(stacked.cols),
+        "vals": dev(stacked.vals),
+        "nnz_in_tile": dev(stacked.nnz_in_tile),
+    }
+    from repro.core.partition import load_imbalance
+
+    return DistributedGraph(
+        arrays=arrays,
+        tile=tiles.tile,
+        n_rows_padded=tiles.padded_shape[0],
+        n_rows=tiles.shape[0],
+        n_parts=n_parts,
+        imbalance=load_imbalance(part),
+    )
+
+
+def aggregate_distributed(
+    g: DistributedGraph, z: jnp.ndarray, mesh: Mesh, axis: str = "data"
+) -> jnp.ndarray:
+    """out = Â Z with the tile spans sharded over ``axis`` of ``mesh``.
+
+    Per-device partial PS buffers are psum-merged (one collective per
+    aggregation — the paper's end-of-pass merge, §V-G).
+    """
+    from repro.kernels.scv_spmm.ref import scv_spmm_reference
+
+    n_rows_p = g.n_rows_padded
+    tile = g.tile
+
+    def local(arr, z_full):
+        out = scv_spmm_reference(
+            arr["tile_row"][0], arr["tile_col"][0], arr["rows"][0],
+            arr["cols"][0], arr["vals"][0], z_full,
+            tile=tile, n_rows=n_rows_p, nnz_in_tile=arr["nnz_in_tile"][0],
+        )
+        return jax.lax.psum(out, axis)[None]
+
+    specs_in = jax.tree.map(lambda _: P(axis), g.arrays)
+    fn = shard_map(
+        partial(local),
+        mesh=mesh,
+        in_specs=(specs_in, P()),
+        out_specs=P(axis),
+    )
+    out = fn(g.arrays, z)
+    # every shard now holds the merged PS; take shard 0's copy
+    return out[0, : g.n_rows]

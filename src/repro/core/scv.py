@@ -1,0 +1,379 @@
+"""Sparse Compressed Vectors — the paper's contribution (§III).
+
+Two representations are provided:
+
+* :class:`SCVMatrix` — the *logical* format of Fig. 1(d): fixed-height
+  column vectors, per-entry within-vector row offsets (``blk_id``), vector
+  pointer array (``blk_ptr``), vectors enumerated row-major over the block
+  grid (SCV) or along a Z-Morton curve over B x B vector groups (SCV-Z).
+  This is what the cycle/traffic simulator replays and what matches the
+  paper bit-for-bit.
+
+* :class:`SCVTiles` — the *TPU device* layout consumed by the Pallas kernel
+  (see DESIGN.md §2): the same entries regrouped into T x T tiles (a tile =
+  one Z-Morton vector-group = T column vectors), each tile padded to a fixed
+  entry capacity so shapes are static.  Within a tile, entries keep the SCV
+  column-vector order (sorted by local column, then local row).  Tiles are
+  scheduled so that all tiles of one PS block-row are consecutive — the
+  Pallas analogue of "partial sums reused before eviction".
+
+Construction is host-side preprocessing ("statically generated from the COO
+format ... nearly equivalent to creating a CSR or CSC matrix" — §III-C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import morton
+from repro.core.formats import COOMatrix
+
+ROW_MAJOR = "row_major"
+ZMORTON = "zmorton"
+
+
+# ---------------------------------------------------------------------------
+# Logical SCV (paper Fig. 1(d))
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SCVMatrix:
+    blk_ptr: np.ndarray  # int32[n_vectors+1] — start of each vector in vals
+    vec_row_blk: np.ndarray  # int32[n_vectors] — block-row of each vector
+    vec_col: np.ndarray  # int32[n_vectors] — matrix column of each vector
+    blk_id: np.ndarray  # int32[nnz] — row offset within vector (< B)
+    vals: np.ndarray  # f32[nnz]
+    vector_height: int  # B
+    order: str  # ROW_MAJOR (SCV) or ZMORTON (SCV-Z)
+    shape: tuple[int, int]
+
+    @property
+    def n_vectors(self) -> int:
+        return int(self.vec_col.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def index_bits_per_entry(self) -> int:
+        """log2(B) bits per entry — the storage advantage over COO's
+        log2(N) (§III-A)."""
+        return max(1, int(np.ceil(np.log2(self.vector_height))))
+
+    def to_coo(self) -> COOMatrix:
+        counts = np.diff(self.blk_ptr)
+        vrow = np.repeat(self.vec_row_blk, counts).astype(np.int64)
+        vcol = np.repeat(self.vec_col, counts).astype(np.int32)
+        rows = (vrow * self.vector_height + self.blk_id).astype(np.int32)
+        return COOMatrix(rows, vcol, self.vals.copy(), self.shape)
+
+
+def coo_to_scv(
+    a: COOMatrix,
+    vector_height: int,
+    order: str = ZMORTON,
+) -> SCVMatrix:
+    """Build SCV/SCV-Z from COO.
+
+    Vectors (non-empty column strips of height B) are enumerated either
+    row-major over the (block_row, column) grid — plain SCV, Fig. 2(d) —
+    or along a Z-Morton curve over B x B vector *groups* with column order
+    inside a group — SCV-Z, Fig. 2(e).
+    """
+    if order not in (ROW_MAJOR, ZMORTON):
+        raise ValueError(f"unknown order {order!r}")
+    B = int(vector_height)
+    if B <= 0:
+        raise ValueError("vector_height must be positive")
+    m, n = a.shape
+
+    row_blk = (a.rows // B).astype(np.int64)
+    blk_id = (a.rows % B).astype(np.int64)
+    col = a.cols.astype(np.int64)
+
+    if order == ROW_MAJOR:
+        # vectors ordered (block_row, col); entries within vector by row
+        vkey = row_blk * n + col
+        entry_key = vkey * B + blk_id
+    else:
+        # Z-curve over (block_row, col // B) groups, columns in order
+        # inside a group, rows in order inside a vector.
+        grp = morton.morton_encode(row_blk, col // B).astype(np.uint64)
+        # combined key: (zcurve group, local col, local row)
+        local_col = (col % B).astype(np.uint64)
+        entry_key = (grp * np.uint64(B) + local_col) * np.uint64(B) + blk_id.astype(
+            np.uint64
+        )
+        vkey = grp * np.uint64(B) + local_col  # unique per vector, curve order
+
+    eorder = np.argsort(entry_key, kind="stable")
+    vkey_s = np.asarray(vkey)[eorder]
+    uniq, start = np.unique(vkey_s, return_index=True)
+    counts = np.diff(np.append(start, len(vkey_s)))
+    blk_ptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+
+    first = eorder[start]  # one representative entry per vector
+    return SCVMatrix(
+        blk_ptr=blk_ptr,
+        vec_row_blk=row_blk[first].astype(np.int32),
+        vec_col=col[first].astype(np.int32),
+        blk_id=blk_id[eorder].astype(np.int32),
+        vals=a.vals[eorder],
+        vector_height=B,
+        order=order,
+        shape=a.shape,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Device tile layout for the Pallas kernel
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SCVTiles:
+    """Static-shape tiled SCV for `kernels/scv_spmm`.
+
+    ``tile_row/tile_col`` give each tile's block coordinates (scalar-
+    prefetched on TPU to steer the Z and PS BlockSpec index maps).  Entry
+    arrays are padded to ``cap`` per tile; padding entries have val == 0 and
+    row == col == 0 (they add zero — no masking needed in the kernel).
+    Heavy tiles are split into chains of logical tiles sharing coordinates.
+
+    Schedule invariant: tiles with equal ``tile_row`` are consecutive, and
+    ``tile_row`` is non-decreasing **within each partition span** — the
+    Pallas output window then moves monotonically and each PS strip is
+    written back exactly once per span (paper's PS-reuse property).
+    """
+
+    tile_row: np.ndarray  # int32[nt]
+    tile_col: np.ndarray  # int32[nt]
+    rows: np.ndarray  # int32[nt, cap] — local row within tile
+    cols: np.ndarray  # int32[nt, cap] — local col within tile
+    vals: np.ndarray  # f32[nt, cap]
+    nnz_in_tile: np.ndarray  # int32[nt]
+    tile: int  # T (== SCV vector height == vector-group side)
+    cap: int
+    shape: tuple[int, int]  # original (unpadded) matrix shape
+    order: str
+    perm: np.ndarray = None  # int64[nt, cap]: source COO entry of each slot (-1 pad)
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.tile_row.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.nnz_in_tile.sum())
+
+    @property
+    def padded_shape(self) -> tuple[int, int]:
+        T = self.tile
+        m, n = self.shape
+        return (-(-m // T) * T, -(-n // T) * T)
+
+    @property
+    def padding_fraction(self) -> float:
+        tot = self.n_tiles * self.cap
+        return 1.0 - self.nnz / tot if tot else 0.0
+
+    def to_coo(self) -> COOMatrix:
+        T = self.tile
+        rows = (
+            self.tile_row[:, None].astype(np.int64) * T + self.rows
+        ).ravel()
+        cols = (
+            self.tile_col[:, None].astype(np.int64) * T + self.cols
+        ).ravel()
+        vals = self.vals.ravel()
+        keep = np.arange(self.cap)[None, :] < self.nnz_in_tile[:, None]
+        keep = keep.ravel()
+        return COOMatrix(
+            rows[keep].astype(np.int32),
+            cols[keep].astype(np.int32),
+            vals[keep],
+            self.shape,
+        )
+
+
+def _auto_cap(counts: np.ndarray, tile: int) -> int:
+    """Pick the per-tile entry capacity minimizing padded slots.
+
+    Splitting a tile with k entries under cap c costs ceil(k/c)*c slots; we
+    scan caps (multiples of 8 — TPU sublane count) and take the argmin.
+    """
+    if len(counts) == 0:
+        return 8
+    cands = []
+    hi = int(min(counts.max(), tile * tile))
+    c = 8
+    while c < hi * 2:
+        cands.append(c)
+        c *= 2
+    cands.append(max(8, hi))
+    best, best_slots = cands[0], None
+    for c in cands:
+        slots = int((-(-counts // c) * c).sum())
+        if best_slots is None or slots < best_slots:
+            best, best_slots = c, slots
+    return int(best)
+
+
+def coo_to_scv_tiles(
+    a: COOMatrix,
+    tile: int,
+    cap: Optional[int] = None,
+    order: str = ZMORTON,
+) -> SCVTiles:
+    """COO -> device tile layout (see class docstring)."""
+    T = int(tile)
+    m, n = a.shape
+    nbc = -(-n // T)
+    trow = (a.rows // T).astype(np.int64)
+    tcol = (a.cols // T).astype(np.int64)
+    lrow = (a.rows % T).astype(np.int64)
+    lcol = (a.cols % T).astype(np.int64)
+    tkey = trow * nbc + tcol
+    # SCV discipline within a tile: column-vector order (local col, row)
+    eorder = np.argsort(tkey * (T * T) + lcol * T + lrow, kind="stable")
+    tkey_s = tkey[eorder]
+    uniq, start = np.unique(tkey_s, return_index=True)
+    counts = np.diff(np.append(start, len(tkey_s))).astype(np.int64)
+    utrow = (uniq // nbc).astype(np.int64)
+    utcol = (uniq % nbc).astype(np.int64)
+
+    if cap is None:
+        cap = _auto_cap(counts, T)
+    cap = int(cap)
+
+    # Tile schedule: group by block-row (consecutive PS windows); within a
+    # block-row, Z order degenerates to ascending column — the cross-row
+    # locality of the full 2-D curve is exploited at the *partition* level
+    # (core/partition.py splits the true Z curve across devices).
+    if order == ZMORTON:
+        zkey = morton.morton_encode(utrow, utcol)
+        sched = np.lexsort((zkey, utrow))
+    elif order == ROW_MAJOR:
+        sched = np.lexsort((utcol, utrow))
+    else:
+        raise ValueError(f"unknown order {order!r}")
+
+    # split heavy tiles into chains; emit final static arrays
+    n_chunks = (-(-counts // cap)).astype(np.int64)
+    nt = int(n_chunks.sum()) if len(n_chunks) else 0
+    tile_row = np.zeros(nt, np.int32)
+    tile_col = np.zeros(nt, np.int32)
+    rows_out = np.zeros((nt, cap), np.int32)
+    cols_out = np.zeros((nt, cap), np.int32)
+    vals_out = np.zeros((nt, cap), a.vals.dtype)
+    nnz_out = np.zeros(nt, np.int32)
+    perm_out = np.full((nt, cap), -1, np.int64)
+
+    lrow_s = lrow[eorder]
+    lcol_s = lcol[eorder]
+    vals_s = a.vals[eorder]
+    out = 0
+    for b in sched:
+        s, k = int(start[b]), int(counts[b])
+        for off in range(0, k, cap):
+            take = min(cap, k - off)
+            sl = slice(s + off, s + off + take)
+            tile_row[out] = utrow[b]
+            tile_col[out] = utcol[b]
+            rows_out[out, :take] = lrow_s[sl]
+            cols_out[out, :take] = lcol_s[sl]
+            vals_out[out, :take] = vals_s[sl]
+            perm_out[out, :take] = eorder[sl]
+            nnz_out[out] = take
+            out += 1
+    assert out == nt
+    return SCVTiles(
+        tile_row=tile_row,
+        tile_col=tile_col,
+        rows=rows_out,
+        cols=cols_out,
+        vals=vals_out,
+        nnz_in_tile=nnz_out,
+        tile=T,
+        cap=cap,
+        shape=a.shape,
+        order=order,
+        perm=perm_out,
+    )
+
+
+def scv_to_tiles(a: SCVMatrix, cap: Optional[int] = None) -> SCVTiles:
+    return coo_to_scv_tiles(a.to_coo(), a.vector_height, cap=cap, order=a.order)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid dense-tile split (beyond-paper; DESIGN.md §2)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DenseTiles:
+    """Logical tiles dense enough for the MXU (nnz > T^2 * VPU/MXU)."""
+
+    tile_row: np.ndarray  # int32[nd]
+    tile_col: np.ndarray  # int32[nd]
+    blocks: np.ndarray  # f32[nd, T, T] densified
+    tile: int
+    shape: tuple[int, int]
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.tile_row.shape[0])
+
+
+def split_hybrid(
+    tiles: SCVTiles, vpu_mxu_ratio: float = 1.0 / 16.0
+) -> tuple[SCVTiles, DenseTiles]:
+    """Partition logical tiles by density: tiles with
+    nnz > T^2 * vpu_mxu_ratio run as dense T x T matmuls on the MXU
+    (cheaper there than per-entry gather-FMA on the VPU); the ultra-sparse
+    rest keeps the SCV gather path.  v5e: MXU 16384 MAC/cyc vs VPU 1024
+    lane/cyc -> ratio 1/16."""
+    T = tiles.tile
+    key = tiles.tile_row.astype(np.int64) * (2**32) + tiles.tile_col
+    uniq, inv = np.unique(key, return_inverse=True)
+    tot = np.zeros(len(uniq), np.int64)
+    np.add.at(tot, inv, tiles.nnz_in_tile.astype(np.int64))
+    dense_logical = tot > (T * T) * vpu_mxu_ratio
+    is_dense = dense_logical[inv]
+
+    def subset(mask):
+        return SCVTiles(
+            tile_row=tiles.tile_row[mask],
+            tile_col=tiles.tile_col[mask],
+            rows=tiles.rows[mask],
+            cols=tiles.cols[mask],
+            vals=tiles.vals[mask],
+            nnz_in_tile=tiles.nnz_in_tile[mask],
+            tile=T,
+            cap=tiles.cap,
+            shape=tiles.shape,
+            order=tiles.order,
+            perm=tiles.perm[mask] if tiles.perm is not None else None,
+        )
+
+    sparse = subset(~is_dense)
+    dpart = subset(is_dense)
+    # densify the dense part (grouped by logical tile)
+    dkey = dpart.tile_row.astype(np.int64) * (2**32) + dpart.tile_col
+    duniq, dinv = np.unique(dkey, return_inverse=True)
+    blocks = np.zeros((len(duniq), T, T), np.float32)
+    slot = np.arange(dpart.cap)[None, :]
+    keep = slot < dpart.nnz_in_tile[:, None]
+    ti = np.repeat(dinv, dpart.cap)[keep.ravel()]
+    np.add.at(
+        blocks,
+        (ti, dpart.rows[keep], dpart.cols[keep]),
+        dpart.vals[keep],
+    )
+    dtiles = DenseTiles(
+        tile_row=(duniq >> 32).astype(np.int32),
+        tile_col=(duniq & 0xFFFFFFFF).astype(np.int32),
+        blocks=blocks,
+        tile=T,
+        shape=tiles.shape,
+    )
+    return sparse, dtiles

@@ -1,0 +1,4 @@
+from repro.kernels.scv_spmm.ops import scv_spmm, ensure_row_coverage
+from repro.kernels.scv_spmm.ref import scv_spmm_reference
+
+__all__ = ["scv_spmm", "scv_spmm_reference", "ensure_row_coverage"]

@@ -1,0 +1,134 @@
+"""Jit-ready public wrapper around the SCV SpMM Pallas kernel.
+
+Handles:
+* padding Z to (tile, feature_block) multiples,
+* inserting zero-nnz dummy tiles so every PS block-row is visited (the
+  kernel zero-initializes a strip on first visit; unvisited strips would
+  be undefined),
+* custom VJP: d/dZ = Â^T g (played through the reference segment-sum path,
+  which XLA fuses well) and d/dvals = <g[row], z[col]> — making SCV
+  aggregation trainable end-to-end (GNN training, §VII future work (i)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.scv_spmm import ref as _ref
+from repro.kernels.scv_spmm.scv_spmm import scv_spmm_pallas
+
+
+def ensure_row_coverage(
+    tile_row: np.ndarray,
+    tile_col: np.ndarray,
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    nnz_in_tile: np.ndarray,
+    n_row_blocks: int,
+):
+    """Append one zero-nnz dummy tile per unvisited block-row (host-side)."""
+    missing = np.setdiff1d(
+        np.arange(n_row_blocks, dtype=np.int32), np.unique(tile_row)
+    )
+    if len(missing) == 0:
+        return tile_row, tile_col, rows, cols, vals, nnz_in_tile
+    k, cap = len(missing), rows.shape[1] if rows.ndim == 2 else 1
+    return (
+        np.concatenate([tile_row, missing]),
+        np.concatenate([tile_col, np.zeros(k, tile_col.dtype)]),
+        np.concatenate([rows, np.zeros((k, cap), rows.dtype)]),
+        np.concatenate([cols, np.zeros((k, cap), cols.dtype)]),
+        np.concatenate([vals, np.zeros((k, cap), vals.dtype)]),
+        np.concatenate([nnz_in_tile, np.zeros(k, nnz_in_tile.dtype)]),
+    )
+
+
+def _pad_z(z: jnp.ndarray, tile: int, feature_block: int) -> jnp.ndarray:
+    n, f = z.shape
+    np_ = -(-n // tile) * tile
+    fp = -(-f // feature_block) * feature_block
+    if (np_, fp) == (n, f):
+        return z
+    return jnp.zeros((np_, fp), z.dtype).at[:n, :f].set(z)
+
+
+# custom_vjp over (vals, z); index arrays are non-differentiable ints.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 7, 8, 9, 10))
+def _spmm(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, tile, n_rows, feature_block, interpret):
+    return scv_spmm_pallas(
+        tile_row, tile_col, nnz_in_tile, rows, cols, vals, z,
+        tile=tile, n_rows=n_rows, feature_block=feature_block, interpret=interpret,
+    )
+
+
+def _spmm_fwd(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, tile, n_rows, feature_block, interpret):
+    out = _spmm(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, tile, n_rows, feature_block, interpret)
+    return out, (vals, z)
+
+
+def _spmm_bwd(tile_row, tile_col, nnz_in_tile, rows, cols, tile, n_rows, feature_block, interpret, res, g):
+    vals, z = res
+    grows = (tile_row[:, None] * tile + rows).reshape(-1)
+    gcols = (tile_col[:, None] * tile + cols).reshape(-1)
+    gf = g.astype(jnp.float32)
+    zf = z.astype(jnp.float32)
+    # d/dvals_e = <g[row_e], z[col_e]>
+    dvals = jnp.sum(gf[grows] * zf[gcols], axis=-1).reshape(vals.shape)
+    # mask padding slots (their val is structurally zero)
+    slot = jnp.arange(vals.shape[1], dtype=jnp.int32)[None, :]
+    dvals = jnp.where(slot < nnz_in_tile[:, None], dvals, 0.0).astype(vals.dtype)
+    # d/dZ = A^T g : scatter-add g rows into z rows, weighted
+    dz = jnp.zeros(z.shape, jnp.float32)
+    dz = dz.at[gcols].add(gf[grows] * vals.reshape(-1)[:, None].astype(jnp.float32))
+    return (dvals, dz.astype(z.dtype))
+
+
+_spmm.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+def scv_spmm(
+    tile_row: jnp.ndarray,
+    tile_col: jnp.ndarray,
+    rows: jnp.ndarray,
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    z: jnp.ndarray,
+    *,
+    tile: int,
+    n_rows: int,
+    nnz_in_tile: jnp.ndarray | None = None,
+    feature_block: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """out = Â Z over the SCV tile layout.  Returns f32[n_rows, F]."""
+    if tile_row.shape[0] == 0:
+        return jnp.zeros((n_rows, z.shape[1]), jnp.float32)
+    f_orig = z.shape[1]
+    feature_block = min(feature_block, -(-f_orig // 128) * 128)
+    zp = _pad_z(z, tile, feature_block)
+    if nnz_in_tile is None:
+        # infer: padding slots have val exactly 0 *and* row/col 0; count
+        # conservatively as "all slots" (val==0 slots are harmless anyway)
+        nnz_in_tile = jnp.full(tile_row.shape, vals.shape[1], jnp.int32)
+    out = _spmm(
+        tile_row.astype(jnp.int32),
+        tile_col.astype(jnp.int32),
+        nnz_in_tile.astype(jnp.int32),
+        rows.astype(jnp.int32),
+        cols.astype(jnp.int32),
+        vals,
+        zp,
+        tile,
+        n_rows,
+        feature_block,
+        interpret,
+    )
+    return out[:, :f_orig]
+
+
+def scv_spmm_reference(*args, **kw):
+    return _ref.scv_spmm_reference(*args, **kw)

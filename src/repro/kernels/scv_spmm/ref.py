@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the SCV SpMM kernel.
+
+Numerically identical to the Pallas kernel (same tile layout, same
+accumulation order up to float-add reassociation); used by unit tests and
+as the CPU fallback backend in ``core.aggregate``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "n_rows"))
+def scv_spmm_reference(
+    tile_row: jnp.ndarray,  # i32[nt]
+    tile_col: jnp.ndarray,  # i32[nt]
+    rows: jnp.ndarray,  # i32[nt, cap] local row within tile
+    cols: jnp.ndarray,  # i32[nt, cap] local col within tile
+    vals: jnp.ndarray,  # f32[nt, cap] (0 for padding slots)
+    z: jnp.ndarray,  # [n_cols, F] dense combined features
+    *,
+    tile: int,
+    n_rows: int,
+    nnz_in_tile: jnp.ndarray | None = None,  # i32[nt] — masks padding slots
+) -> jnp.ndarray:
+    """out[tile_row*T + rows] += vals * z[tile_col*T + cols]  (accum f32).
+
+    Padding slots are structural zeros: masking them (rather than relying
+    on val == 0) keeps d/dvals zero there, matching the kernel's VJP.
+    """
+    if tile_row.shape[0] == 0:
+        return jnp.zeros((n_rows, z.shape[1]), jnp.float32)
+    if nnz_in_tile is not None:
+        slot = jnp.arange(vals.shape[1], dtype=jnp.int32)[None, :]
+        vals = jnp.where(slot < nnz_in_tile[:, None], vals, 0.0)
+    gcols = (tile_col[:, None] * tile + cols).reshape(-1)
+    grows = (tile_row[:, None] * tile + rows).reshape(-1)
+    gathered = z[gcols].astype(jnp.float32) * vals.reshape(-1)[:, None].astype(
+        jnp.float32
+    )
+    return jax.ops.segment_sum(gathered, grows, num_segments=n_rows)

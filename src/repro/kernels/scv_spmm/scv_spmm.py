@@ -1,0 +1,131 @@
+"""Pallas TPU kernel for SCV aggregation (DESIGN.md §2).
+
+Mapping of the paper's mechanisms onto Pallas/TPU:
+
+* One grid step processes one SCV tile (a Z-Morton vector group: T column
+  vectors of height T).  ``PrefetchScalarGridSpec`` prefetches the tile
+  coordinate arrays so the BlockSpec index maps are data-dependent — the
+  "implicitly stores non-zero column locations → efficient prefetching"
+  property of §III-B: Pallas double-buffers the *next* tile's Z block while
+  the current tile computes, and skips the copy entirely when consecutive
+  tiles share a column block (SCV's Z-reuse).
+
+* The output BlockSpec revisits the same PS strip for every tile of a
+  block-row; because the tile schedule keeps block-rows contiguous
+  (``SCVTiles`` invariant), the strip lives in VMEM across all its tiles
+  and is written back to HBM exactly once — §III-B's "fetched PS rows are
+  reused multiple times before being evicted".
+
+* Within a tile, entries are in column-vector order; consecutive entries
+  hit *different* PS sublanes (distinct rows within a vector), so the FMA
+  chain has no same-address RAW dependency — the TPU analogue of the
+  paper's hazard-free parallelism (§IV-B); see DESIGN.md for the mapping.
+
+* Padding entries carry val == 0 and are additionally skipped by bounding
+  the entry loop with the prefetched per-tile nnz.
+
+VMEM budget per step (defaults T=256, Fb=256, cap<=2048):
+  Z block 256x256 f32 = 256 KiB, PS block 256 KiB, entries ~24 KiB
+  -> ~0.6 MiB double-buffered, comfortably inside the ~16 MiB/core VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    # scalar-prefetch operands
+    tile_row_ref,  # i32[nt]
+    tile_col_ref,  # i32[nt]  (steers z BlockSpec; unused in body)
+    nnz_ref,  # i32[nt]
+    # array operands
+    rows_ref,  # i32[1, cap]   (SMEM) local row of each entry
+    cols_ref,  # i32[1, cap]   (SMEM) local col of each entry
+    vals_ref,  # f32[1, cap]   (SMEM) value of each entry
+    z_ref,  # [T, Fb]       (VMEM) combined-feature block
+    out_ref,  # f32[T, Fb]    (VMEM) PS strip block
+):
+    t = pl.program_id(1)
+
+    # Fresh PS strip?  (first tile overall, or block-row changed.)
+    prev = jnp.maximum(t - 1, 0)
+    new_strip = jnp.logical_or(t == 0, tile_row_ref[t] != tile_row_ref[prev])
+
+    @pl.when(new_strip)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    nnz = nnz_ref[t]
+
+    def body(i, _):
+        r = rows_ref[0, i]
+        c = cols_ref[0, i]
+        v = vals_ref[0, i].astype(jnp.float32)
+        zrow = z_ref[pl.ds(c, 1), :].astype(jnp.float32)
+        out_ref[pl.ds(r, 1), :] += v * zrow
+        return 0
+
+    jax.lax.fori_loop(0, nnz, body, 0, unroll=False)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile", "n_rows", "feature_block", "interpret"),
+)
+def scv_spmm_pallas(
+    tile_row: jnp.ndarray,  # i32[nt]
+    tile_col: jnp.ndarray,  # i32[nt]
+    nnz_in_tile: jnp.ndarray,  # i32[nt]
+    rows: jnp.ndarray,  # i32[nt, cap]
+    cols: jnp.ndarray,  # i32[nt, cap]
+    vals: jnp.ndarray,  # f32[nt, cap]
+    z: jnp.ndarray,  # [n_cols_padded, F_padded] — multiples of (tile, feature_block)
+    *,
+    tile: int,
+    n_rows: int,  # padded to a multiple of tile
+    feature_block: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    nt, cap = vals.shape
+    n_cols_p, f_p = z.shape
+    T, Fb = tile, feature_block
+    assert n_rows % T == 0 and n_cols_p % T == 0 and f_p % Fb == 0, (
+        n_rows,
+        z.shape,
+        T,
+        Fb,
+    )
+
+    grid = (f_p // Fb, nt)  # feature blocks outer, tiles inner
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            # entry coordinate/value arrays: one tile's slice per step, SMEM
+            pl.BlockSpec(
+                (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=pltpu.SMEM
+            ),
+            pl.BlockSpec(
+                (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=pltpu.SMEM
+            ),
+            pl.BlockSpec(
+                (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=pltpu.SMEM
+            ),
+            # Z block steered by the prefetched tile column
+            pl.BlockSpec((T, Fb), lambda f, t, tr, tc, nz: (tc[t], f)),
+        ],
+        out_specs=pl.BlockSpec((T, Fb), lambda f, t, tr, tc, nz: (tr[t], f)),
+    )
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, f_p), jnp.float32),
+        interpret=interpret,
+    )(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z)

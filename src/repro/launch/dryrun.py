@@ -1,0 +1,235 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes, extract memory/cost/collective statistics for the
+roofline analysis (EXPERIMENTS.md §Dry-run / §Roofline).
+
+MUST be run as a fresh process (the XLA_FLAGS above lock in at first jax
+import).  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b \
+        --shape train_4k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Collective bytes are parsed from the compiled HLO (operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute)
+because cost_analysis does not report them.
+"""
+import argparse
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.configs.common import SHAPES, abstract_opt_state
+from repro.launch.mesh import make_production_mesh
+from repro.train import sharding as shd
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:f|bf|s|u|pred|tuple|\()[^=]*?)?(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of each collective op (per device)."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(.*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start|-done)?\(", line)
+        if not m or (m.group(3) == "-done"):
+            continue
+        kind = m.group(2)
+        shapes = _SHAPE_RE.findall(m.group(1))
+        nbytes = 0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] += nbytes
+        counts[kind] += 1
+    out["counts"] = counts
+    return out
+
+
+def _spec_tree_to_shardings(mesh, shapes, axes_tree, rules):
+    return jax.tree.map(
+        lambda x, ax: jax.sharding.NamedSharding(mesh, shd._resolve(x.shape, ax, rules, mesh)),
+        shapes,
+        axes_tree,
+        is_leaf=lambda x: hasattr(x, "shape"),
+    )
+
+
+def _batch_shardings(mesh, batch):
+    from jax.sharding import PartitionSpec as P
+
+    def one(x):
+        # shard the leading (batch) dim over as many data-like axes as the
+        # size divides (long_500k has global_batch=1 -> fully replicated)
+        assign, size = [], 1
+        for a in ("pod", "data"):
+            if a in mesh.shape and x.shape[0] % (size * mesh.shape[a]) == 0:
+                assign.append(a)
+                size *= mesh.shape[a]
+        ax = tuple(assign) if len(assign) != 1 else assign[0]
+        spec = P(*((ax if assign else None,) + (None,) * (len(x.shape) - 1)))
+        return jax.sharding.NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, batch, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def dryrun_cell(arch_name: str, shape_name: str, multi_pod: bool = False,
+                verbose: bool = True) -> dict:
+    spec = ARCHS[arch_name]
+    shape = SHAPES[shape_name]
+    if shape_name not in spec.shapes:
+        return {"arch": arch_name, "shape": shape_name, "status": "skipped",
+                "note": spec.skip_notes}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    params_shapes = jax.eval_shape(lambda: spec.init(jax.random.PRNGKey(0))[0])
+    # logical-axes tree is static; the reduced init (same structure) is cheap
+    _, axes_tree = spec.init(jax.random.PRNGKey(0), reduced=True)
+
+    param_shardings = shd.make_param_sharding(mesh, params_shapes, axes_tree)
+    batch = spec.input_specs(shape_name)
+    batch_shardings = _batch_shardings(mesh, batch)
+
+    with shd.use_mesh(mesh):
+        if shape.kind == "train":
+            if spec.master_weights:
+                from repro.configs.common import bf16_params
+
+                params_shapes = bf16_params(params_shapes)
+            opt_shapes = abstract_opt_state(params_shapes, spec.master_weights)
+            opt_shardings = {
+                "m": param_shardings,
+                "v": param_shardings,
+                "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            }
+            if spec.master_weights:
+                opt_shardings["master"] = param_shardings
+            step = spec.make_train_step()
+            scalar = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+            metrics_shardings = {"loss": scalar, "grad_norm": scalar, "lr": scalar}
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_shardings, opt_shardings, batch_shardings),
+                out_shardings=(param_shardings, opt_shardings, metrics_shardings),
+                donate_argnums=(0, 1),
+            ).lower(params_shapes, opt_shapes, batch)
+        elif shape.kind == "prefill":
+            step = spec.make_prefill_step(shape)
+            lowered = jax.jit(
+                step, in_shardings=(param_shardings, batch_shardings)
+            ).lower(params_shapes, batch)
+        else:  # decode
+            state_shapes, state_axes = spec.state_specs(shape_name)
+            state_shardings = _spec_tree_to_shardings(
+                mesh, state_shapes, state_axes, shd.ACT_RULES
+            )
+            step = spec.make_decode_step(shape)
+            # logits inherit batch sharding; the new state MUST carry the
+            # input state's shardings so donation aliases the (huge) cache
+            logits_shape = jax.eval_shape(step, params_shapes, state_shapes, batch)[0]
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_shardings, state_shardings, batch_shardings),
+                out_shardings=(
+                    _batch_shardings(mesh, logits_shape), state_shardings
+                ),
+                donate_argnums=(1,),
+            ).lower(params_shapes, state_shapes, batch)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    # xla's cost_analysis counts while bodies once; hlocost multiplies by
+    # known trip counts (launch/hlocost.py) — use it for the roofline.
+    from repro.launch import hlocost
+
+    corrected = hlocost.analyze(hlo_text)
+    result = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": corrected.flops,
+        "bytes_per_device": corrected.hbm_bytes,
+        "xla_flops_per_device_uncorrected": ca.get("flops", 0.0),
+        "xla_bytes_per_device_uncorrected": ca.get("bytes accessed", 0.0),
+        "collective_bytes_per_device": corrected.collective_bytes,
+        "collective_counts": corrected.collective_counts,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "n_params": spec.param_count(),
+        "n_active_params": spec.active_param_count(),
+    }
+    if verbose:
+        print(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a, spec in ARCHS.items():
+            for s in spec.shapes:
+                cells.append((a, s))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for a, s in cells:
+        try:
+            results.append(dryrun_cell(a, s, multi_pod=args.multi_pod))
+        except Exception as e:  # a failing cell is a bug — surface it loudly
+            results.append({"arch": a, "shape": s, "status": "FAILED",
+                            "error": f"{type(e).__name__}: {e}"})
+            print(f"FAILED {a} x {s}: {e}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    print(f"\n{ok}/{len(results)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

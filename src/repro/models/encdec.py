@@ -1,0 +1,246 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the task spec the conv/audio frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings [B, S_enc, d_model].  The transformer backbone
+(bidirectional encoder, causal decoder with cross-attention) is real.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.transformer import _stacked_init
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_layers: int  # per side (whisper-small: 12 + 12)
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    max_positions: int = 32768 + 8
+    act: str = "gelu"
+    dtype: object = jnp.bfloat16
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    def attn_cfg(self, causal):
+        return L.AttnConfig(
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_heads,
+            head_dim=self.head_dim,
+            d_model=self.d_model,
+            causal=causal,
+        )
+
+
+def _init_cross(key, cfg: EncDecConfig):
+    ks = jax.random.split(key, 4)
+    H, D, M = cfg.n_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": L.make_param(ks[0], (M, H, D), ("embed", "heads", "head_dim")),
+        "wk": L.make_param(ks[1], (M, H, D), ("embed", "heads", "head_dim")),
+        "wv": L.make_param(ks[2], (M, H, D), ("embed", "heads", "head_dim")),
+        "wo": L.make_param(ks[3], (H, D, M), ("heads", "head_dim", "embed")),
+    }
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_layernorm(cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg.attn_cfg(False)),
+        "ln2": L.init_layernorm(cfg.d_model),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_layernorm(cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg.attn_cfg(True)),
+        "ln_x": L.init_layernorm(cfg.d_model),
+        "xattn": _init_cross(ks[1], cfg),
+        "ln2": L.init_layernorm(cfg.d_model),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def init_encdec(key, cfg: EncDecConfig):
+    ks = jax.random.split(key, 5)
+    params, specs = L.split_tree(
+        {
+            "embed": L.init_embed(ks[0], cfg.vocab, cfg.d_model),
+            "pos_dec": L.make_param(
+                ks[1], (cfg.max_positions, cfg.d_model), ("seq", "embed")
+            ),
+            "ln_enc": L.init_layernorm(cfg.d_model),
+            "ln_dec": L.init_layernorm(cfg.d_model),
+        }
+    )
+    for name, fn in [("enc", _init_enc_layer), ("dec", _init_dec_layer)]:
+        p, s = _stacked_init(lambda k: fn(k, cfg), ks[3 if name == "enc" else 4], cfg.n_layers)
+        params[name] = p
+        specs[name] = s
+    return params, specs
+
+
+def _sinusoid(S, d, dtype):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None]
+    ang = pos / (10_000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def cross_attention(p, x, kv, cfg: EncDecConfig, precomputed=None):
+    """x: [B,Sq,M] queries (decoder); kv: [B,Sk,M] encoder output (or None
+    when precomputed k/v are given — the decode-time fast path)."""
+    B, Sq, M = x.shape
+    q = jnp.einsum("bsm,mhd->bshd", x, p["wq"].astype(x.dtype))
+    if precomputed is None:
+        k = jnp.einsum("bsm,mhd->bshd", kv, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsm,mhd->bshd", kv, p["wv"].astype(x.dtype))
+    else:
+        k, v = precomputed
+    Sk = k.shape[1]
+    pos_q = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    pos_k = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None], (B, Sk))
+    acfg = cfg.attn_cfg(False)
+    fn = L.attention_blockwise if Sk >= 2048 else L.attention_scores
+    out = fn(q, k, v, pos_q, pos_k, acfg)
+    y = jnp.einsum("bshd,hdm->bsm", out, p["wo"].astype(x.dtype))
+    return y, (k, v)
+
+
+def encode(params, cfg: EncDecConfig, frames):
+    """frames: [B, S_enc, d_model] stub frontend embeddings."""
+    x = (frames + _sinusoid(frames.shape[1], cfg.d_model, frames.dtype)[None]).astype(
+        cfg.dtype
+    )
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    acfg = cfg.attn_cfg(False)
+
+    def body(x, lp):
+        h = L.layernorm(lp["ln1"], x)
+        a, _ = L.attention(lp["attn"], h, acfg, pos)
+        x = x + a
+        h = L.layernorm(lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h, cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc"])
+    return L.layernorm(params["ln_enc"], x)
+
+
+def decode_train(params, cfg: EncDecConfig, tokens, enc_out):
+    """Teacher-forced decoder pass.  tokens: [B, S_dec]."""
+    B, S = tokens.shape
+    x = (
+        L.embed(params["embed"], tokens)
+        + params["pos_dec"][:S][None]
+    ).astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    acfg = cfg.attn_cfg(True)
+
+    def body(x, lp):
+        h = L.layernorm(lp["ln1"], x)
+        a, _ = L.attention(lp["attn"], h, acfg, pos)
+        x = x + a
+        h = L.layernorm(lp["ln_x"], x)
+        a, _ = cross_attention(lp["xattn"], h, enc_out, cfg)
+        x = x + a
+        h = L.layernorm(lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h, cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec"])
+    return L.layernorm(params["ln_dec"], x)
+
+
+def train_loss(params, cfg: EncDecConfig, batch):
+    enc_out = encode(params, cfg, batch["frames"])
+    x = decode_train(params, cfg, batch["tokens"][:, :-1], enc_out)
+    return L.chunked_softmax_xent(params["embed"], x, batch["tokens"][:, 1:], true_vocab=cfg.vocab)
+
+
+def init_dec_cache(params, cfg: EncDecConfig, enc_out, max_len):
+    """Self-attn ring caches + precomputed cross K/V per layer."""
+    B = enc_out.shape[0]
+    H, D = cfg.n_heads, cfg.head_dim
+
+    def xkv(lp):
+        k = jnp.einsum("bsm,mhd->bshd", enc_out, lp["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("bsm,mhd->bshd", enc_out, lp["wv"].astype(enc_out.dtype))
+        return k, v
+
+    xk, xv = jax.vmap(xkv)(params["dec"]["xattn"])
+    return {
+        "k": jnp.zeros((cfg.n_layers, B, max_len, H, D), cfg.dtype),
+        "v": jnp.zeros((cfg.n_layers, B, max_len, H, D), cfg.dtype),
+        "pos": jnp.full((cfg.n_layers, max_len), 2**30, jnp.int32),
+        "len": jnp.zeros((cfg.n_layers,), jnp.int32),
+        "xk": xk,
+        "xv": xv,
+    }
+
+
+def decode_step(params, cfg: EncDecConfig, token, cache, pos):
+    """One decoder token.  token: [B,1]; pos: [B,1]."""
+    B = token.shape[0]
+    x = (
+        L.embed(params["embed"], token)
+        + jnp.take(params["pos_dec"], pos[0], axis=0)[None]
+    ).astype(cfg.dtype)
+    acfg = cfg.attn_cfg(True)
+
+    def body(x, xs):
+        lp, k, v, slot_pos, ln, xk, xv = xs
+        h = L.layernorm(lp["ln1"], x)
+        a, nc = L.attention(
+            lp["attn"], h, acfg, pos, cache={"k": k, "v": v, "pos": slot_pos, "len": ln}
+        )
+        x = x + a
+        h = L.layernorm(lp["ln_x"], x)
+        a, _ = cross_attention(lp["xattn"], h, None, cfg, precomputed=(xk, xv))
+        x = x + a
+        h = L.layernorm(lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h, cfg.act)
+        return x, (nc["k"], nc["v"], nc["pos"], nc["len"])
+
+    x, (nk, nv, npos, nlen) = jax.lax.scan(
+        body,
+        x,
+        (
+            params["dec"],
+            cache["k"],
+            cache["v"],
+            cache["pos"],
+            cache["len"],
+            cache["xk"],
+            cache["xv"],
+        ),
+    )
+    x = L.layernorm(params["ln_dec"], x)
+    logits = L.unembed_logits(params["embed"], x, true_vocab=cfg.vocab)
+    new_cache = dict(cache, k=nk, v=nv, pos=npos, len=nlen)
+    return logits, new_cache
+
+
+def cache_specs(cfg: EncDecConfig):
+    return {
+        "k": ("layers", "batch", "seq", "heads", "head_dim"),
+        "v": ("layers", "batch", "seq", "heads", "head_dim"),
+        "pos": ("layers", "seq"),
+        "len": ("layers",),
+        "xk": ("layers", "batch", "seq", "heads", "head_dim"),
+        "xv": ("layers", "batch", "seq", "heads", "head_dim"),
+    }

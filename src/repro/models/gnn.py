@@ -1,0 +1,182 @@
+"""GNN model zoo (the paper's own family): GCN, GraphSAGE, GIN, GAT.
+
+All models express aggregation through ``repro.core.aggregate`` so any
+sparse backend (CSR / CSC / SCV / SCV-Z / Pallas kernel) is a drop-in —
+this is the paper's technique as a first-class framework feature, and it
+is *trainable*: edge weights flow through the kernel's custom VJP (the
+paper's future-work item (i)).
+
+Graphs are passed as a ``Graph`` bundle carrying the COO plus prebuilt SCV
+tiles; per-edge attention (GAT) re-weights tile values through
+``SCVTiles.perm``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import aggregate_scv_tiles, scv_device_arrays
+from repro.core.formats import COOMatrix
+from repro.core.scv import SCVTiles, coo_to_scv_tiles
+from repro.models.layers import make_param, split_tree
+
+
+@dataclasses.dataclass
+class Graph:
+    """Device-ready graph: COO arrays + SCV tiles + degree info."""
+
+    n_nodes: int
+    rows: jnp.ndarray  # i32[E] (normalized adjacency entries)
+    cols: jnp.ndarray
+    vals: jnp.ndarray  # f32[E] normalized weights (GCN) or 1s
+    tiles: SCVTiles
+    tile_arrays: dict  # device bundle incl. dummy coverage rows
+    perm: jnp.ndarray  # i64[nt, cap] source entry of each tile slot
+
+
+def build_graph(adj: COOMatrix, tile: int = 64, backend_cap: Optional[int] = None) -> Graph:
+    tiles = coo_to_scv_tiles(adj, tile, cap=backend_cap)
+    arrays = scv_device_arrays(tiles)
+    nt_cov = arrays["tile_row"].shape[0]
+    perm = np.full((nt_cov, tiles.cap), -1, np.int64)
+    perm[: tiles.perm.shape[0]] = tiles.perm
+    return Graph(
+        n_nodes=adj.shape[0],
+        rows=jnp.asarray(adj.rows),
+        cols=jnp.asarray(adj.cols),
+        vals=jnp.asarray(adj.vals),
+        tiles=tiles,
+        tile_arrays=arrays,
+        perm=jnp.asarray(perm),
+    )
+
+
+def _agg(g: Graph, z, edge_vals=None, backend="jnp"):
+    """Aggregate with optional per-edge re-weighting (GAT)."""
+    arrays = g.tile_arrays
+    if edge_vals is not None:
+        ev = jnp.concatenate([edge_vals, jnp.zeros((1,), edge_vals.dtype)])
+        arrays = dict(arrays, vals=ev[g.perm].astype(arrays["vals"].dtype))
+    return aggregate_scv_tiles(g.tiles, z, backend=backend, arrays=arrays)[
+        : g.n_nodes
+    ]
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+
+def init_gcn_layer(key, d_in, d_out):
+    return {"w": make_param(key, (d_in, d_out), ("gnn_in", "gnn_out"))}
+
+
+def gcn_layer(p, g: Graph, h, backend="jnp"):
+    z = h @ p["w"].astype(h.dtype)  # combination, Eq. (2)
+    return _agg(g, z, backend=backend)  # aggregation, Eq. (3)
+
+
+def init_sage_layer(key, d_in, d_out):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_self": make_param(k1, (d_in, d_out), ("gnn_in", "gnn_out")),
+        "w_neigh": make_param(k2, (d_in, d_out), ("gnn_in", "gnn_out")),
+    }
+
+
+def sage_layer(p, g: Graph, h, backend="jnp"):
+    neigh = _agg(g, h @ p["w_neigh"].astype(h.dtype), backend=backend)
+    return h @ p["w_self"].astype(h.dtype) + neigh
+
+
+def init_gin_layer(key, d_in, d_out):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": make_param(k1, (d_in, d_out), ("gnn_in", "gnn_out")),
+        "w2": make_param(k2, (d_out, d_out), ("gnn_in", "gnn_out")),
+        "eps": (jnp.zeros((), jnp.float32), ()),
+    }
+
+
+def gin_layer(p, g: Graph, h, backend="jnp"):
+    agg = _agg(g, h, backend=backend)  # sum aggregation over raw features
+    z = (1.0 + p["eps"]) * h + agg
+    z = jax.nn.relu(z @ p["w1"].astype(h.dtype))
+    return z @ p["w2"].astype(h.dtype)
+
+
+def init_gat_layer(key, d_in, d_out):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w": make_param(k1, (d_in, d_out), ("gnn_in", "gnn_out")),
+        "a_src": make_param(k2, (d_out,), ("gnn_out",)),
+        "a_dst": make_param(k3, (d_out,), ("gnn_out",)),
+    }
+
+
+def gat_layer(p, g: Graph, h, backend="jnp"):
+    """Single-head GAT: per-edge attention -> SCV aggregation with
+    re-weighted values (weighted aggregation, §IV-D)."""
+    z = h @ p["w"].astype(h.dtype)
+    e_src = z @ p["a_src"].astype(h.dtype)  # [N]
+    e_dst = z @ p["a_dst"].astype(h.dtype)
+    logits = jax.nn.leaky_relu(e_src[g.rows] + e_dst[g.cols], 0.2)
+    # edge softmax per destination row (stable)
+    rmax = jnp.full((g.n_nodes,), -1e30, logits.dtype).at[g.rows].max(logits)
+    ex = jnp.exp(logits - rmax[g.rows])
+    denom = jnp.zeros((g.n_nodes,), ex.dtype).at[g.rows].add(ex)
+    alpha = ex / jnp.maximum(denom[g.rows], 1e-9)
+    return _agg(g, z, edge_vals=alpha, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# models
+# ---------------------------------------------------------------------------
+
+_LAYERS = {
+    "gcn": (init_gcn_layer, gcn_layer),
+    "sage": (init_sage_layer, sage_layer),
+    "gin": (init_gin_layer, gin_layer),
+    "gat": (init_gat_layer, gat_layer),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str  # gcn | sage | gin | gat
+    d_in: int
+    d_hidden: int
+    n_classes: int
+    n_layers: int = 2
+    backend: str = "jnp"  # aggregation backend (pallas on TPU)
+
+
+def init_gnn(key, cfg: GNNConfig):
+    init_fn, _ = _LAYERS[cfg.kind]
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    tree = {}
+    for i, k in enumerate(jax.random.split(key, cfg.n_layers)):
+        tree[f"layer{i}"] = init_fn(k, dims[i], dims[i + 1])
+    return split_tree(tree)
+
+
+def gnn_forward(params, cfg: GNNConfig, g: Graph, x):
+    _, layer_fn = _LAYERS[cfg.kind]
+    h = x
+    for i in range(cfg.n_layers):
+        h = layer_fn(params[f"layer{i}"], g, h, backend=cfg.backend)
+        if i + 1 < cfg.n_layers:
+            h = jax.nn.relu(h)
+    return h
+
+
+def gnn_loss(params, cfg: GNNConfig, g: Graph, x, labels, mask):
+    logits = gnn_forward(params, cfg, g, x)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

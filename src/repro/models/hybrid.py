@@ -1,0 +1,215 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block
+(arXiv:2411.15242).
+
+Every ``share_every`` mamba blocks, one transformer block runs whose
+weights are shared across all its invocations; its input is the
+concatenation of the current hidden state with the original embedding
+(Zamba's residual trick), projected back to d_model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.ssm import Mamba2Config, init_mamba2, init_mamba2_state, mamba2_forward
+from repro.models.transformer import _stacked_init
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    name: str
+    n_mamba: int  # mamba2 blocks (zamba2-2.7b: 54)
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_state: int = 64
+    headdim: int = 64
+    share_every: int = 6  # shared attn block cadence
+    window: int = 4096  # attention window for 500k decode feasibility
+    dtype: object = jnp.bfloat16
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def mamba_cfg(self) -> Mamba2Config:
+        return Mamba2Config(
+            d_model=self.d_model, d_state=self.d_state, headdim=self.headdim
+        )
+
+    @property
+    def n_shared_calls(self) -> int:
+        return self.n_mamba // self.share_every
+
+    def attn_cfg(self):
+        return L.AttnConfig(
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim,
+            d_model=self.d_model,
+            window=self.window,
+        )
+
+
+def _init_mamba_block(key, cfg: HybridConfig):
+    return {
+        "ln": L.init_rmsnorm(cfg.d_model),
+        "mamba": init_mamba2(key, cfg.mamba_cfg),
+    }
+
+
+def init_hybrid(key, cfg: HybridConfig):
+    ks = jax.random.split(key, 6)
+    params, specs = L.split_tree(
+        {
+            "embed": L.init_embed(ks[0], cfg.vocab, cfg.d_model),
+            "ln_final": L.init_rmsnorm(cfg.d_model),
+            "shared": {
+                "proj_in": L.make_param(
+                    ks[1], (2 * cfg.d_model, cfg.d_model), ("embed", "embed2")
+                ),
+                "ln": L.init_rmsnorm(2 * cfg.d_model),
+                "attn": L.init_attention(ks[2], cfg.attn_cfg()),
+                "ln_mlp": L.init_rmsnorm(cfg.d_model),
+                "mlp": L.init_mlp(ks[3], cfg.d_model, cfg.d_ff),
+            },
+        }
+    )
+    bp, bs = _stacked_init(
+        lambda k: _init_mamba_block(k, cfg), ks[4], cfg.n_mamba
+    )
+    # group mamba blocks by share_every so the shared-attn cadence scans
+    grp = cfg.share_every
+    bp = jax.tree.map(lambda a: a.reshape((cfg.n_shared_calls, grp) + a.shape[1:]), bp)
+    params["mamba"] = bp
+    # bs already has a leading "layers"; the reshape adds a second stack dim
+    specs["mamba"] = jax.tree.map(
+        lambda ax: ("layers",) + ax, bs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return params, specs
+
+
+def _shared_block(sp, x, x0, cfg: HybridConfig, positions, cache=None):
+    h = jnp.concatenate([x, x0], axis=-1)
+    h = L.rmsnorm(sp["ln"], h)
+    h = jnp.einsum("bsm,md->bsd", h, sp["proj_in"].astype(x.dtype))
+    a, new_cache = L.attention(sp["attn"], h, cfg.attn_cfg(), positions, cache)
+    x = x + a
+    h = L.rmsnorm(sp["ln_mlp"], x)
+    x = x + L.mlp(sp["mlp"], h)
+    return x, new_cache
+
+
+def hidden_states(params, cfg: HybridConfig, tokens, positions=None, state=None):
+    """state: None (train/prefill) or dict from init_state (decode)."""
+    from repro.train.sharding import constrain
+
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    x = constrain(x, ("batch", None, "embed"))
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x0 = x
+    mcfg = cfg.mamba_cfg
+    sp = params["shared"]
+
+    def group(x, gp, gstate):
+        # shared attention first, then `share_every` mamba blocks
+        new_attn = None
+        if gstate is not None:
+            x, new_attn = _shared_block(sp, x, x0, cfg, positions, gstate["attn"])
+        else:
+            x, _ = _shared_block(sp, x, x0, cfg, positions, None)
+        new_ssm = []
+        for i in range(cfg.share_every):
+            lp = jax.tree.map(lambda a: a[i], gp)
+            h = L.rmsnorm(lp["ln"], x)
+            st = (
+                jax.tree.map(lambda a: a[i], gstate["ssm"])
+                if gstate is not None
+                else None
+            )
+            y, ns = mamba2_forward(lp["mamba"], h, mcfg, state=st)
+            x = constrain(x + y, ("batch", None, "embed"))
+            if ns is not None:
+                new_ssm.append(ns)
+        if gstate is None:
+            return x, None
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_ssm)
+        return x, {"attn": new_attn, "ssm": stacked}
+
+    if state is None:
+        gfn = jax.checkpoint(lambda x, gp: group(x, gp, None)[0])
+
+        def body(x, gp):
+            return gfn(x, gp), None
+
+        x, _ = jax.lax.scan(body, x, params["mamba"])
+        new_state = None
+    else:
+
+        def body(x, xs):
+            gp, gs = xs
+            return group(x, gp, gs)
+
+        x, new_state = jax.lax.scan(body, x, (params["mamba"], state))
+    x = L.rmsnorm(params["ln_final"], x)
+    return x, new_state
+
+
+def init_state(cfg: HybridConfig, batch, max_attn_len):
+    """Decode state: per group, one shared-attn ring cache + per-mamba ssm
+    state.  Attention cache is windowed (cfg.window) — with a 500k context
+    the whole state is O(window + d_state), not O(S)."""
+    size = min(cfg.window, max_attn_len)
+    H, D = cfg.n_kv_heads, cfg.head_dim
+    mcfg = cfg.mamba_cfg
+    one_ssm = init_mamba2_state(mcfg, batch, cfg.dtype)
+
+    def rep(a, n):
+        return jnp.broadcast_to(a, (n,) + a.shape)
+
+    g = cfg.n_shared_calls
+    return {
+        "attn": {
+            "k": jnp.zeros((g, batch, size, H, D), cfg.dtype),
+            "v": jnp.zeros((g, batch, size, H, D), cfg.dtype),
+            "pos": jnp.full((g, size), 2**30, jnp.int32),
+            "len": jnp.zeros((g,), jnp.int32),
+        },
+        "ssm": jax.tree.map(
+            lambda a: rep(rep(a, cfg.share_every), g), one_ssm
+        ),
+    }
+
+
+def train_loss(params, cfg: HybridConfig, batch):
+    x, _ = hidden_states(params, cfg, batch["tokens"][:, :-1])
+    return L.chunked_softmax_xent(params["embed"], x, batch["tokens"][:, 1:], true_vocab=cfg.vocab)
+
+
+def decode_step(params, cfg: HybridConfig, token, state, pos):
+    x, state = hidden_states(params, cfg, token, positions=pos, state=state)
+    logits = L.unembed_logits(params["embed"], x, true_vocab=cfg.vocab)
+    return logits, state
+
+
+def state_specs(cfg: HybridConfig):
+    return {
+        "attn": {
+            "k": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+            "v": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+            "pos": ("layers", "seq"),
+            "len": ("layers",),
+        },
+        "ssm": {
+            "ssm": ("layers", "sublayers", "batch", "mamba_heads", "head_dim", "state"),
+            "conv": ("layers", "sublayers", "batch", "conv", "inner"),
+        },
+    }

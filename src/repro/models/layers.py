@@ -1,0 +1,743 @@
+"""Neural-net building blocks for the assigned architecture zoo.
+
+Everything is pure-functional JAX: ``init_*`` returns (params, specs)
+where ``specs`` mirrors the params pytree with *logical axis names*;
+``repro.train.sharding`` maps logical axes -> mesh axes (MaxText-style
+rules), so the same model code runs on 1 CPU device and on the 512-chip
+production mesh.
+
+Attention supports the variant matrix required by the zoo: GQA, RoPE (per-
+layer base), QKV bias (qwen), logit softcapping (gemma2), sliding-window
+local layers (gemma2/gemma3), and MLA (deepseek-v2).  Long sequences use a
+blockwise (flash-style, online-softmax) formulation so 32k prefill fits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+Specs = dict
+
+# ---------------------------------------------------------------------------
+# param helpers
+# ---------------------------------------------------------------------------
+
+
+def _init_dense(key, shape, scale_axis=0):
+    scale = 1.0 / math.sqrt(max(1, shape[scale_axis]))
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def make_param(key, shape, axes, scale_axis=0, zeros=False):
+    """Returns (array, logical-axes tuple)."""
+    arr = (
+        jnp.zeros(shape, jnp.float32)
+        if zeros
+        else _init_dense(key, shape, scale_axis)
+    )
+    assert len(axes) == len(shape), (axes, shape)
+    return arr, axes
+
+
+def split_tree(tree):
+    """Split {name: (arr, axes)} nested dict -> (params, specs)."""
+    if isinstance(tree, tuple) and len(tree) == 2 and not isinstance(tree[0], dict):
+        return tree[0], tree[1]
+    params, specs = {}, {}
+    for k, v in tree.items():
+        params[k], specs[k] = split_tree(v)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d):
+    return {"scale": (jnp.ones((d,), jnp.float32), ("embed",))}
+
+
+def rmsnorm(p, x, eps=1e-6, zero_centered=True):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    nx = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    scale = p["scale"] + 1.0 if zero_centered else p["scale"]
+    return (nx * scale).astype(x.dtype)
+
+
+def init_layernorm(d):
+    return {
+        "scale": (jnp.ones((d,), jnp.float32), ("embed",)),
+        "bias": (jnp.zeros((d,), jnp.float32), ("embed",)),
+    }
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = jnp.square(xf - mu).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, base=10000.0, dims: Optional[int] = None):
+    """x: [..., S, H, D]; positions: [..., S]. Rotates the first `dims`."""
+    d = x.shape[-1] if dims is None else dims
+    half = d // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    sin = jnp.sin(ang)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half : 2 * half]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if d < x.shape[-1]:
+        rot = jnp.concatenate([rot, x[..., d:]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_model: int
+    rope_base: float = 10000.0
+    qkv_bias: bool = False
+    logit_softcap: float = 0.0  # 0 = off (gemma2: 50.0)
+    window: int = 0  # 0 = global; >0 = sliding-window local
+    query_scale: float = 0.0  # 0 -> 1/sqrt(head_dim)
+    causal: bool = True  # False: bidirectional (whisper encoder)
+
+
+def init_attention(key, cfg: AttnConfig):
+    ks = jax.random.split(key, 4)
+    H, K, D, M = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    p = {
+        "wq": make_param(ks[0], (M, H, D), ("embed", "heads", "head_dim")),
+        "wk": make_param(ks[1], (M, K, D), ("embed", "kv_heads", "head_dim")),
+        "wv": make_param(ks[2], (M, K, D), ("embed", "kv_heads", "head_dim")),
+        "wo": make_param(ks[3], (H, D, M), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = (jnp.zeros((H, D), jnp.float32), ("heads", "head_dim"))
+        p["bk"] = (jnp.zeros((K, D), jnp.float32), ("kv_heads", "head_dim"))
+        p["bv"] = (jnp.zeros((K, D), jnp.float32), ("kv_heads", "head_dim"))
+    return p
+
+
+def _softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def _mask_bias(q_pos, k_pos, window, dtype, causal=True):
+    """[..., Sq, Sk] additive mask: validity + causal + sliding window.
+    k positions >= 2**29 denote invalid (padded / unwritten cache) slots."""
+    ok = k_pos[..., None, :] < 2**29
+    if causal:
+        ok &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window:
+        ok &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return jnp.where(ok, 0.0, -1e30).astype(dtype)
+
+
+def attention_scores(q, k, v, q_pos, k_pos, cfg: AttnConfig):
+    """Reference (materialized-scores) attention.  q: [B,Sq,H,D],
+    k/v: [B,Sk,K,D]."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = cfg.query_scale or (1.0 / math.sqrt(D))
+    qg = q.reshape(B, Sq, K, G, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    logits = _softcap(logits, cfg.logit_softcap)
+    logits = logits + _mask_bias(q_pos, k_pos, cfg.window, jnp.float32, cfg.causal)[
+        :, None, None
+    ]
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def attention_blockwise(q, k, v, q_pos, k_pos, cfg: AttnConfig, kv_block=1024):
+    """Flash-style online-softmax over KV blocks: O(Sq*D + Sq*kv_block)
+    live memory, scan steps rematerialized (per-block score matrices are
+    never saved for backward).
+
+    KV is expanded to H heads first so the score tensor carries a full
+    "heads" dim — shardable over the model axis, with a sequence-sharding
+    fallback when H doesn't divide it (qwen's 40H, whisper's 12H on a
+    16-way axis); see sharding.attn_axes.
+    """
+    from repro.train.sharding import attn_axes, constrain
+
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = cfg.query_scale or (1.0 / math.sqrt(D))
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    ax = attn_axes(H)
+    q = constrain(q, ax)
+    k = constrain(k, ax)
+    v = constrain(v, ax)
+    nb = -(-Sk // kv_block)
+    pad = nb * kv_block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    kb = k.reshape(B, nb, kv_block, H, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, kv_block, H, D).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(B, nb, kv_block).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def step(carry, blk):
+        m, l, acc = carry
+        kcur, vcur, pcur = blk
+        s = jnp.einsum("bqhd,bshd->bhqs", q, kcur).astype(jnp.float32) * scale
+        s = _softcap(s, cfg.logit_softcap)
+        s = s + _mask_bias(q_pos, pcur, cfg.window, jnp.float32, cfg.causal)[:, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqs,bshd->bhqd", p, vcur.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention(p, x, cfg: AttnConfig, positions, cache=None, blockwise=None):
+    """Full attention block (no norms).  x: [B,S,M].
+
+    cache: None for train/prefill-without-cache, or dict with
+    {"k": [B,Smax,K,D], "v": ..., "len": scalar} for decode; returns
+    (out, new_cache_or_None).
+    """
+    B, S, M = x.shape
+    q = jnp.einsum("bsm,mhd->bshd", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsm,mkd->bskd", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsm,mkd->bskd", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = rope(q, positions, cfg.rope_base)
+    k = rope(k, positions, cfg.rope_base)
+
+    if cache is not None:
+        # Ring-buffer cache: size may be < max context (sliding-window
+        # truncation for local layers).  Absolute position of each slot is
+        # tracked in cache["pos"]; unwritten slots stay at 2**30 (invalid).
+        # int8-quantized caches carry per-(pos, head) scales ("k_scale"):
+        # halves HBM footprint and decode read traffic (qwen's 5.5 TB MHA
+        # cache does not fit 256 chips in bf16 — EXPERIMENTS.md §Dry-run).
+        from repro.train.sharding import constrain as _c
+
+        kv_ax = ("batch", None, "kv_heads", "head_dim")
+        k = _c(k, kv_ax)
+        v = _c(v, kv_ax)
+        quant = "k_scale" in cache
+
+        def _q(t):
+            scale = jnp.max(jnp.abs(t), axis=-1, keepdims=True) / 127.0 + 1e-8
+            return (
+                jnp.clip(jnp.round(t / scale), -127, 127).astype(jnp.int8),
+                scale[..., 0].astype(jnp.float32),
+            )
+
+        def _dq(tq, scale, dtype):
+            return (tq.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+        size = cache["k"].shape[1]
+        cur = cache["len"]
+        if S == 1:
+            # decode: scatter the new key, attend over the ring in place
+            slot = cur % size
+            new_cache_extra = {}
+            if quant:
+                kq, ks = _q(k[:, 0])
+                vq, vs = _q(v[:, 0])
+                kfull = cache["k"].at[:, slot].set(kq)
+                vfull = cache["v"].at[:, slot].set(vq)
+                kscale = cache["k_scale"].at[:, slot].set(ks)
+                vscale = cache["v_scale"].at[:, slot].set(vs)
+                k_at = _dq(kfull, kscale, x.dtype)
+                v_at = _dq(vfull, vscale, x.dtype)
+                new_cache_extra = {"k_scale": kscale, "v_scale": vscale}
+            else:
+                kfull = cache["k"].at[:, slot].set(k[:, 0].astype(cache["k"].dtype))
+                vfull = cache["v"].at[:, slot].set(v[:, 0].astype(cache["v"].dtype))
+                k_at, v_at = kfull.astype(x.dtype), vfull.astype(x.dtype)
+            posfull = cache["pos"].at[slot].set(cur)
+            k_pos = jnp.broadcast_to(posfull[None], (B, size))
+            out = attention_scores(q, k_at, v_at, positions, k_pos, cfg)
+        else:
+            # prefill chunk: queries need *all* in-chunk keys (the ring may
+            # be narrower than the chunk), so attend over cache ∪ chunk …
+            new_cache_extra = {}
+            k_pos_old = jnp.broadcast_to(cache["pos"][None], (B, size))
+            if quant:
+                k_old = _dq(cache["k"], cache["k_scale"], x.dtype)
+                v_old = _dq(cache["v"], cache["v_scale"], x.dtype)
+            else:
+                k_old = cache["k"].astype(x.dtype)
+                v_old = cache["v"].astype(x.dtype)
+            k_attn = jnp.concatenate([k_old, k], axis=1)
+            v_attn = jnp.concatenate([v_old, v], axis=1)
+            k_pos = jnp.concatenate([k_pos_old, positions], axis=1)
+            use_block = blockwise if blockwise is not None else S >= 2048
+            fn = attention_blockwise if use_block else attention_scores
+            out = fn(q, k_attn, v_attn, positions, k_pos, cfg)
+            # … then persist only the tail into the ring
+            if S >= size:
+                k_eff, v_eff = k[:, -size:], v[:, -size:]
+                offs = cur + (S - size) + jnp.arange(size, dtype=jnp.int32)
+            else:
+                k_eff, v_eff = k, v
+                offs = cur + jnp.arange(S, dtype=jnp.int32)
+            slots = offs % size
+            if quant:
+                kq, ks = _q(k_eff)
+                vq, vs = _q(v_eff)
+                kfull = cache["k"].at[:, slots].set(kq)
+                vfull = cache["v"].at[:, slots].set(vq)
+                new_cache_extra = {
+                    "k_scale": cache["k_scale"].at[:, slots].set(ks),
+                    "v_scale": cache["v_scale"].at[:, slots].set(vs),
+                }
+            else:
+                kfull = cache["k"].at[:, slots].set(k_eff.astype(cache["k"].dtype))
+                vfull = cache["v"].at[:, slots].set(v_eff.astype(cache["v"].dtype))
+            posfull = cache["pos"].at[slots].set(offs)
+        new_cache = {"k": kfull, "v": vfull, "pos": posfull, "len": cur + S,
+                     **new_cache_extra}
+    else:
+        k_pos = positions
+        use_block = blockwise if blockwise is not None else S >= 2048
+        fn = attention_blockwise if use_block else attention_scores
+        out = fn(q, k, v, positions, k_pos, cfg)
+        new_cache = None
+    y = jnp.einsum("bshd,hdm->bsm", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): compressed KV cache attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_base: float = 10000.0
+
+
+def init_mla(key, cfg: MLAConfig):
+    ks = jax.random.split(key, 6)
+    H = cfg.n_heads
+    M = cfg.d_model
+    R = cfg.kv_lora_rank
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": make_param(ks[0], (M, H, qd), ("embed", "heads", "head_dim")),
+        "wdkv": make_param(ks[1], (M, R + cfg.qk_rope_dim), ("embed", "mla_rank")),
+        "wuk": make_param(ks[2], (R, H, cfg.qk_nope_dim), ("mla_rank", "heads", "head_dim")),
+        "wuv": make_param(ks[3], (R, H, cfg.v_head_dim), ("mla_rank", "heads", "head_dim")),
+        "wo": make_param(ks[4], (H, cfg.v_head_dim, M), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_attention(p, x, cfg: MLAConfig, positions, cache=None):
+    """Multi-head latent attention; the cache stores only the compressed
+    c_kv (rank R) plus the shared rope key — MLA's memory win."""
+    B, S, M = x.shape
+    H, R = cfg.n_heads, cfg.kv_lora_rank
+    q = jnp.einsum("bsm,mhd->bshd", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_rope = rope(q_rope, positions, cfg.rope_base)
+    ckv = jnp.einsum("bsm,mr->bsr", x, p["wdkv"].astype(x.dtype))
+    c, k_rope = ckv[..., :R], ckv[..., R:]
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_base)[:, :, 0]
+
+    quant = cache is not None and "ckv_scale" in cache
+    cscale = None
+    if cache is not None:
+        cur = cache["len"]
+        if quant:
+            # int8 latent cache: per-position scale; the absorbed decode
+            # folds the scale into the logits/weights so the dequantized
+            # cache is never materialized
+            s_new = jnp.max(jnp.abs(c), axis=-1) / 127.0 + 1e-8
+            cq = jnp.clip(jnp.round(c / s_new[..., None]), -127, 127).astype(jnp.int8)
+            c = jax.lax.dynamic_update_slice(cache["ckv"], cq, (0, cur, 0))
+            cscale = jax.lax.dynamic_update_slice(
+                cache["ckv_scale"], s_new.astype(jnp.float32), (0, cur)
+            )
+        else:
+            c = jax.lax.dynamic_update_slice(
+                cache["ckv"], c.astype(cache["ckv"].dtype), (0, cur, 0)
+            )
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), (0, cur, 0)
+        )
+        Smax = c.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32)[None], (B, Smax))
+        k_pos = jnp.where(k_pos < cur + S, k_pos, 2**30)
+        new_cache = {"ckv": c, "krope": k_rope, "len": cur + S}
+        if quant:
+            new_cache["ckv_scale"] = cscale
+    else:
+        k_pos = positions
+        new_cache = None
+    if not quant:
+        c = c.astype(x.dtype)
+    elif S != 1:
+        # prefill/train with a quantized cache: dequantize for the
+        # blockwise/materialized paths (decode keeps the folded form)
+        c = c.astype(x.dtype) * cscale[..., None].astype(x.dtype)
+        quant = False
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+
+    if cache is not None and S == 1:
+        # ABSORBED decode (deepseek-v2 §2.1.3 trick): fold W_uk into the
+        # query and W_uv into the output so per-position K/V are never
+        # materialized — attention runs directly against the rank-R cache.
+        q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, p["wuk"].astype(x.dtype))
+        c_mat = c.astype(x.dtype)
+        logits = jnp.einsum("bqhr,bsr->bhqs", q_abs, c_mat).astype(jnp.float32)
+        if quant:
+            logits = logits * cscale[:, None, None, :]
+        logits = (
+            logits
+            + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope.astype(x.dtype)).astype(jnp.float32)
+        ) * scale
+        logits = logits + _mask_bias(positions, k_pos, 0, jnp.float32)[:, None]
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        if quant:  # fold the per-position scale into the weights
+            w = w * cscale[:, None, None, :].astype(x.dtype)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", w, c_mat)
+        out = jnp.einsum("bqhr,rhd->bqhd", ctx, p["wuv"].astype(x.dtype))
+    elif S >= 2048:
+        out = _mla_blockwise(p, q_nope, q_rope, c, k_rope, positions, k_pos, cfg, scale, x.dtype)
+    else:
+        k_nope = jnp.einsum("bsr,rhd->bshd", c, p["wuk"].astype(x.dtype))
+        vv = jnp.einsum("bsr,rhd->bshd", c, p["wuv"].astype(x.dtype))
+        logits = (
+            jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope)
+            + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope.astype(x.dtype))
+        ).astype(jnp.float32) * scale
+        logits = logits + _mask_bias(positions, k_pos, 0, jnp.float32)[:, None]
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshd->bqhd", w, vv)
+    y = jnp.einsum("bqhd,hdm->bqm", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def _mla_blockwise(p, q_nope, q_rope, c, k_rope, q_pos, k_pos, cfg, scale, dtype,
+                   kv_block=1024):
+    """Memory-efficient MLA prefill/train: scan over compressed-cache
+    blocks; per-position K/V are expanded ONE BLOCK AT A TIME from the
+    rank-R latents and immediately consumed (checkpointed)."""
+    from repro.train.sharding import attn_axes, constrain
+
+    B, Sq, H, Dn = q_nope.shape
+    Dv = cfg.v_head_dim
+    Sk = c.shape[1]
+    ax = attn_axes(H)
+    q_nope = constrain(q_nope, ax)
+    q_rope = constrain(q_rope, ax)
+    nb = -(-Sk // kv_block)
+    pad = nb * kv_block - Sk
+    if pad:
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    cb = c.reshape(B, nb, kv_block, -1).transpose(1, 0, 2, 3)
+    rb = k_rope.reshape(B, nb, kv_block, -1).transpose(1, 0, 2, 3)
+    pb = k_pos.reshape(B, nb, kv_block).transpose(1, 0, 2)
+    wuk = p["wuk"].astype(dtype)
+    wuv = p["wuv"].astype(dtype)
+
+    @jax.checkpoint
+    def step(carry, blk):
+        m, l, acc = carry
+        ccur, rcur, pcur = blk
+        kn = jnp.einsum("bsr,rhd->bshd", ccur, wuk)
+        vv = jnp.einsum("bsr,rhd->bshd", ccur, wuv)
+        s = (
+            jnp.einsum("bqhd,bshd->bhqs", q_nope, kn)
+            + jnp.einsum("bqhd,bsd->bhqs", q_rope, rcur.astype(dtype))
+        ).astype(jnp.float32) * scale
+        s = s + _mask_bias(q_pos, pcur, 0, jnp.float32)[:, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + pexp.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqs,bshd->bhqd", pexp, vv.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (cb, rb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, gated=True, act="silu"):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": make_param(ks[0], (d_model, d_ff), ("embed", "mlp")),
+        "wo": make_param(ks[1], (d_ff, d_model), ("mlp", "embed")),
+    }
+    if gated:
+        p["wg"] = make_param(ks[2], (d_model, d_ff), ("embed", "mlp"))
+    return p
+
+
+_ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}
+
+
+def mlp(p, x, act="silu"):
+    h = jnp.einsum("bsm,mf->bsf", x, p["wi"].astype(x.dtype))
+    if "wg" in p:
+        g = jnp.einsum("bsm,mf->bsf", x, p["wg"].astype(x.dtype))
+        h = _ACT[act](g) * h
+    else:
+        h = _ACT[act](h)
+    return jnp.einsum("bsf,fm->bsm", h, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MoE with SCV-inspired sorted dispatch (DESIGN.md §2, §4)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int  # per-expert hidden
+    n_shared: int = 0  # always-on shared experts (deepseek-v2)
+    capacity_factor: float = 1.25
+    act: str = "silu"
+
+
+def init_moe(key, cfg: MoEConfig):
+    ks = jax.random.split(key, 5)
+    E, M, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": make_param(ks[0], (M, E), ("embed", "expert")),
+        "wi": make_param(ks[1], (E, M, F), ("expert", "embed", "mlp")),
+        "wg": make_param(ks[2], (E, M, F), ("expert", "embed", "mlp")),
+        "wo": make_param(ks[3], (E, F, M), ("expert", "mlp", "embed")),
+    }
+    if cfg.n_shared:
+        p["shared"] = init_mlp(ks[4], M, F * cfg.n_shared, gated=True)
+    return p
+
+
+def moe_sorted(p, x, cfg: MoEConfig):
+    """Token-grouped (sorted) dispatch — the SCV trick applied to MoE.
+
+    The token->expert assignment matrix is ultra-sparse (top-k of E).  As
+    in SCV, we sort the entries so each expert ("column vector") consumes a
+    contiguous block, which turns the expert FFN into dense blocked
+    matmuls and makes Z/PS-style reuse explicit.  Sorting is per batch row,
+    so it shards cleanly over the data axes.
+
+    Returns (y, aux) with aux = load-balancing loss (Switch-style).
+    """
+    B, S, M = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = S * K
+    cap = int(cfg.capacity_factor * N / E) + 1
+
+    logits = jnp.einsum("bsm,me->bse", x, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)  # [B,S,K]
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    flat_e = eidx.reshape(B, N)  # expert of each (token, k) slot
+    flat_t = jnp.broadcast_to(jnp.arange(S)[:, None], (S, K)).reshape(N)
+    order = jnp.argsort(flat_e, axis=1)  # SCV sort: group by expert
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=1)
+    # rank of each slot within its expert group
+    start = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(E)))(e_sorted)
+    rank = jnp.arange(N)[None] - jnp.take_along_axis(start, e_sorted, axis=1)
+    keep = rank < cap
+    dst = jnp.where(keep, e_sorted * cap + rank, E * cap)  # overflow slot
+
+    # gather token vectors into [B, E*cap+1, M] expert buffers.
+    # Fused dispatch (§Perf iteration olmoe-1): compose the two gathers
+    # (token-of-slot ∘ sort-order) into ONE index array so a single gather
+    # feeds the scatter — the intermediate [B,N,M] copies of the v0
+    # dispatch never materialize.
+    from repro.train.sharding import constrain
+
+    src_tok = jnp.take_along_axis(
+        jnp.broadcast_to(flat_t[None], (B, N)), order, axis=1
+    )  # [B,N] token index feeding each sorted slot
+    tok_sorted = jnp.take_along_axis(x, src_tok[..., None], axis=1)
+    tok_sorted = constrain(tok_sorted, ("batch", None, "embed"))
+    buf = jnp.zeros((B, E * cap + 1, M), x.dtype)
+    buf = jax.vmap(lambda b, d, t: b.at[d].set(t))(buf, dst, tok_sorted)
+    # expert-parallel: the dispatch buffer re-shards from (embed-TP) to
+    # (expert-EP) — GSPMD emits the all-to-all here (DESIGN.md §5)
+    ebuf = constrain(
+        buf[:, : E * cap].reshape(B, E, cap, M), ("batch", "expert", None, None)
+    )
+
+    h = jnp.einsum("becm,emf->becf", ebuf, p["wi"].astype(x.dtype))
+    g = jnp.einsum("becm,emf->becf", ebuf, p["wg"].astype(x.dtype))
+    h = constrain(_ACT[cfg.act](g) * h, ("batch", "expert", None, None))
+    out = jnp.einsum("becf,efm->becm", h, p["wo"].astype(x.dtype))
+    out = constrain(out, ("batch", "expert", None, None))
+    out = constrain(out.reshape(B, E * cap, M), ("batch", "expert", None))
+    out = jnp.concatenate([out, jnp.zeros((B, 1, M), x.dtype)], axis=1)
+
+    # un-sort with ONE gather: slot of (token,k) = dst[inv] — the composed
+    # index reads expert outputs directly (no [B,N,M] val_sorted copy)
+    inv = jnp.argsort(order, axis=1)
+    slot_of_tok = jnp.take_along_axis(jnp.where(keep, dst, E * cap), inv, axis=1)
+    val = jnp.take_along_axis(out, slot_of_tok[..., None], axis=1)  # [B,N,M]
+    val = constrain(val, ("batch", None, "embed"))
+    val = val.reshape(B, S, K, M)
+    y = jnp.einsum("bskm,bsk->bsm", val, gate.astype(x.dtype))
+
+    if cfg.n_shared:
+        y = y + mlp(p["shared"], x, cfg.act)
+
+    # Switch aux loss: E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros(E).at[eidx.reshape(-1)].add(1.0) / (B * N)
+    aux = E * jnp.sum(me * ce)
+    return y, aux
+
+
+def moe_dense(p, x, cfg: MoEConfig):
+    """Dense one-hot fallback (every expert sees every token, masked).
+    FLOP-heavy but collective-simple; used for A/B in §Perf."""
+    B, S, M = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("bsm,me->bse", x, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+    mask = jnp.zeros((B, S, E), jnp.float32)
+    mask = jax.vmap(jax.vmap(lambda m, i, g: m.at[i].add(g)))(mask, eidx, gate)
+    h = jnp.einsum("bsm,emf->bsef", x, p["wi"].astype(x.dtype))
+    g = jnp.einsum("bsm,emf->bsef", x, p["wg"].astype(x.dtype))
+    h = _ACT[cfg.act](g) * h
+    out = jnp.einsum("bsef,efm->bsem", h, p["wo"].astype(x.dtype))
+    y = jnp.einsum("bsem,bse->bsm", out, mask.astype(x.dtype))
+    if cfg.n_shared:
+        y = y + mlp(p["shared"], x, cfg.act)
+    me = probs.mean(axis=(0, 1))
+    ce = mask.mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembed
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab, d_model, pad_to=256):
+    """Embedding table padded to a shardable row count (vocab axis is
+    tensor-parallel; e.g. 50280 -> 50432 = 16 x 3152).  The true vocab is
+    enforced by masking in unembed_logits."""
+    vpad = -(-vocab // pad_to) * pad_to
+    return {"table": make_param(key, (vpad, d_model), ("vocab", "embed"))}
+
+
+def embed(p, tokens, scale=False):
+    t = p["table"]
+    x = t[tokens]
+    if scale:
+        x = x * math.sqrt(t.shape[1])
+    return x
+
+
+def unembed_logits(p, x, softcap=0.0, true_vocab=None):
+    from repro.train.sharding import constrain
+
+    logits = jnp.einsum("bsm,vm->bsv", x, p["table"].astype(x.dtype))
+    logits = constrain(logits, ("batch", None, "vocab"))
+    logits = _softcap(logits.astype(jnp.float32), softcap)
+    vpad = p["table"].shape[0]
+    if true_vocab is not None and true_vocab < vpad:
+        mask = jnp.arange(vpad) >= true_vocab
+        logits = jnp.where(mask[None, None, :], -1e30, logits)
+    return logits
+
+
+def chunked_softmax_xent(p_embed, x, labels, softcap=0.0, chunk=512, mask=None, true_vocab=None):
+    """Cross-entropy without materializing [B,S,V] at once: scan over
+    sequence chunks (production trick for 256k vocabularies)."""
+    B, S, M = x.shape
+    nchunk = -(-S // chunk)
+    pad = nchunk * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else jnp.pad(
+            jnp.ones((B, S), jnp.float32), ((0, 0), (0, pad))
+        )
+    elif mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    xs = x.reshape(B, nchunk, chunk, M).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nchunk, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(B, nchunk, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def step(carry, inp):
+        xc, lc, mc = inp
+        logits = unembed_logits(p_embed, xc, softcap, true_vocab=true_vocab)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (carry[0] + nll.sum(), carry[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (0.0, 0.0), (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,302 @@
+"""Mamba2 — state-space duality (SSD) blocks (arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic +
+inter-chunk state recurrence via lax.scan); decode is the O(1) recurrent
+update.  The implementation follows the minimal listing in the Mamba2
+paper, adapted to this framework's (params, logical-axes) convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import make_param, rmsnorm, init_rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def init_mamba2(key, cfg: Mamba2Config):
+    ks = jax.random.split(key, 5)
+    Din, H, G, N = cfg.d_inner, cfg.n_heads, cfg.n_groups, cfg.d_state
+    d_in_proj = 2 * Din + 2 * G * N + H
+    return {
+        "w_in": make_param(ks[0], (cfg.d_model, d_in_proj), ("embed", "inner")),
+        "conv_w": make_param(ks[1], (cfg.conv_width, cfg.conv_dim), ("conv", "inner")),
+        "conv_b": (jnp.zeros((cfg.conv_dim,), jnp.float32), ("inner",)),
+        "a_log": (jnp.zeros((H,), jnp.float32), ("mamba_heads",)),
+        "dt_bias": (jnp.zeros((H,), jnp.float32), ("mamba_heads",)),
+        "d_skip": (jnp.ones((H,), jnp.float32), ("mamba_heads",)),
+        "norm": init_rmsnorm(Din),
+        "w_out": make_param(ks[4], (Din, cfg.d_model), ("inner", "embed")),
+    }
+
+
+def _segsum(x):
+    """log-decay matrix: L[..., i, j] = sum_{k=j+1..i} x[..., k] (i >= j)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    L = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, L, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk):
+    """SSD over chunks.  Shapes:
+      x: [B,S,H,P]; dt: [B,S,H]; a_log: [H]; b,c: [B,S,G,N].
+    Returns y: [B,S,H,P] and final state [B,H,P,N].
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    Q = chunk
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    rep = H // G  # heads per B/C group
+    # fold dt into x; decay per step
+    xd = x * dt[..., None]
+    adt = -jnp.exp(a_log)[None, None, :] * dt  # [B,S',H] (negative)
+
+    def to_chunks(t):
+        return t.reshape((B, nc, Q) + t.shape[2:]).transpose(1, 0, *range(2, t.ndim + 1))
+
+    from repro.train.sharding import constrain
+
+    xc = constrain(to_chunks(xd), (None, "batch", None, "mamba_heads", None))
+    ac = constrain(to_chunks(adt), (None, "batch", None, "mamba_heads"))
+    bc = to_chunks(b)  # [nc,B,Q,G,N] — G==1 stays replicated over model
+    cc = to_chunks(c)
+
+    acum = jnp.cumsum(ac, axis=2)  # [nc,B,Q,H]
+
+    # intra-chunk (diagonal) term
+    Lmat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))  # [nc,B,H,Q,Q]
+    if G == 1:
+        bh = jnp.broadcast_to(bc, bc.shape[:3] + (H, N))
+        ch = jnp.broadcast_to(cc, cc.shape[:3] + (H, N))
+    else:
+        bh = jnp.repeat(bc, rep, axis=3)
+        ch = jnp.repeat(cc, rep, axis=3)
+    scores = jnp.einsum("nbqhs,nbkhs->nbhqk", ch, bh)  # q,k within chunk
+    y_diag = jnp.einsum("nbhqk,nbhqk,nbkhp->nbqhp", scores, Lmat, xc)
+
+    # end-of-chunk states
+    decay_states = jnp.exp(acum[:, :, -1:, :] - acum)  # [nc,B,Q,H]
+    states = jnp.einsum("nbqhs,nbqh,nbqhp->nbhps", bh, decay_states, xc)
+    chunk_decay = jnp.exp(acum[:, :, -1, :])  # [nc,B,H]
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_final, h_in = jax.lax.scan(
+        scan_fn, h0, (states.astype(jnp.float32), chunk_decay.astype(jnp.float32))
+    )
+
+    # contribution of entering state to each position
+    state_decay = jnp.exp(acum)  # [nc,B,Q,H]
+    y_off = jnp.einsum(
+        "nbqhs,nbhps,nbqh->nbqhp", ch, h_in.astype(ch.dtype), state_decay
+    )
+    y = (y_diag + y_off).transpose(1, 0, 2, 3, 4).reshape(B, nc * Q, H, P)
+    return y[:, :S], h_final
+
+
+def mamba2_forward(p, u, cfg: Mamba2Config, state=None):
+    """u: [B,S,M].  state=None for train/prefill; for decode pass
+    {"ssm": [B,H,P,N], "conv": [B,W-1,conv_dim]} and S must be 1.
+    Returns (y, new_state_or_None)."""
+    B, S, M = u.shape
+    Din, H, G, N, P = cfg.d_inner, cfg.n_heads, cfg.n_groups, cfg.d_state, cfg.headdim
+    zxbcdt = jnp.einsum("bsm,md->bsd", u, p["w_in"].astype(u.dtype))
+    z, xbc, dt_raw = jnp.split(zxbcdt, [Din, Din + cfg.conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+
+    w = p["conv_w"].astype(u.dtype)  # [W, conv_dim]
+    if state is None:
+        pad = jnp.zeros((B, cfg.conv_width - 1, cfg.conv_dim), u.dtype)
+        xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+        new_conv = None
+    else:
+        xbc_pad = jnp.concatenate([state["conv"].astype(u.dtype), xbc], axis=1)
+        new_conv = xbc_pad[:, -(cfg.conv_width - 1) :]
+    # causal depthwise conv as W shifted scaled adds (no W-x window copy)
+    acc = xbc_pad[:, 0:S] * w[0]
+    for j in range(1, cfg.conv_width):
+        acc = acc + xbc_pad[:, j : j + S] * w[j]
+    xbc = jax.nn.silu(acc + p["conv_b"].astype(u.dtype))
+
+    x, b, c = jnp.split(xbc, [Din, Din + G * N], axis=-1)
+    from repro.train.sharding import constrain as _constrain
+
+    x = _constrain(x.reshape(B, S, H, P), ("batch", None, "mamba_heads", None))
+    b = b.reshape(B, S, G, N)
+    c = c.reshape(B, S, G, N)
+
+    if state is None:
+        y, h_final = ssd_chunked(
+            x.astype(jnp.float32), dt, p["a_log"], b.astype(jnp.float32),
+            c.astype(jnp.float32), cfg.chunk,
+        )
+        new_state = None
+    else:
+        # recurrent step (S == 1): h = h*exp(a*dt) + dt * B x^T ; y = C h
+        h = state["ssm"]
+        adt = jnp.exp(-jnp.exp(p["a_log"])[None, :] * dt[:, 0])  # [B,H]
+        bh = jnp.broadcast_to(b[:, 0, :, :], (B, H, N)) if G == 1 else jnp.repeat(
+            b[:, 0], H // G, axis=1
+        )
+        ch = jnp.broadcast_to(c[:, 0, :, :], (B, H, N)) if G == 1 else jnp.repeat(
+            c[:, 0], H // G, axis=1
+        )
+        upd = jnp.einsum("bhp,bhn->bhpn", (x[:, 0] * dt[:, 0, :, None]).astype(jnp.float32), bh.astype(jnp.float32))
+        h = h * adt[..., None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", ch.astype(jnp.float32), h)[:, None]
+        h_final = h
+        new_state = {"ssm": h_final, "conv": new_conv}
+    y = y + x.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, Din).astype(u.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bsd,dm->bsm", y, p["w_out"].astype(u.dtype))
+    return out, new_state
+
+
+def init_mamba2_state(cfg: Mamba2Config, batch, dtype=jnp.float32):
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.headdim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Pure-Mamba2 LM (mamba2-780m)
+# ---------------------------------------------------------------------------
+import dataclasses as _dc
+
+from repro.models.layers import (
+    chunked_softmax_xent,
+    embed as _embed,
+    init_embed as _init_embed,
+    split_tree as _split_tree,
+    unembed_logits as _unembed_logits,
+)
+
+
+@_dc.dataclass(frozen=True)
+class Mamba2LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    d_state: int = 128
+    headdim: int = 64
+    dtype: object = jnp.bfloat16
+
+    @property
+    def block_cfg(self) -> Mamba2Config:
+        return Mamba2Config(
+            d_model=self.d_model, d_state=self.d_state, headdim=self.headdim
+        )
+
+
+def init_mamba2_lm(key, cfg: Mamba2LMConfig):
+    from repro.models.transformer import _stacked_init
+
+    ks = jax.random.split(key, 3)
+    params, specs = _split_tree(
+        {
+            "embed": _init_embed(ks[0], cfg.vocab, cfg.d_model),
+            "ln_final": init_rmsnorm(cfg.d_model),
+        }
+    )
+    bp, bs = _stacked_init(
+        lambda k: {"ln": init_rmsnorm(cfg.d_model), "mamba": init_mamba2(k, cfg.block_cfg)},
+        ks[1],
+        cfg.n_layers,
+    )
+    params["blocks"] = bp
+    specs["blocks"] = bs
+    return params, specs
+
+
+def mamba2_lm_hidden(params, cfg: Mamba2LMConfig, tokens, state=None):
+    from repro.train.sharding import constrain
+
+    x = _embed(params["embed"], tokens).astype(cfg.dtype)
+    x = constrain(x, ("batch", None, "embed"))
+    mcfg = cfg.block_cfg
+
+    def block(x, lp, st):
+        h = rmsnorm(lp["ln"], x)
+        y, ns = mamba2_forward(lp["mamba"], h, mcfg, state=st)
+        return constrain(x + y, ("batch", None, "embed")), ns
+
+    if state is None:
+        gfn = jax.checkpoint(lambda x, lp: block(x, lp, None)[0])
+
+        def body(x, lp):
+            return gfn(x, lp), None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        new_state = None
+    else:
+
+        def body(x, xs):
+            lp, st = xs
+            return block(x, lp, st)
+
+        x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+    return rmsnorm(params["ln_final"], x), new_state
+
+
+def mamba2_lm_loss(params, cfg: Mamba2LMConfig, batch):
+    x, _ = mamba2_lm_hidden(params, cfg, batch["tokens"][:, :-1])
+    return chunked_softmax_xent(params["embed"], x, batch["tokens"][:, 1:], true_vocab=cfg.vocab)
+
+
+def init_mamba2_lm_state(cfg: Mamba2LMConfig, batch):
+    one = init_mamba2_state(cfg.block_cfg, batch, cfg.dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one
+    )
+
+
+def mamba2_lm_state_specs(cfg: Mamba2LMConfig):
+    return {
+        "ssm": ("layers", "batch", "mamba_heads", "head_dim", "state"),
+        "conv": ("layers", "batch", "conv", "inner"),
+    }
+
+
+def mamba2_lm_decode(params, cfg: Mamba2LMConfig, token, state, pos=None):
+    x, state = mamba2_lm_hidden(params, cfg, token, state=state)
+    return _unembed_logits(params["embed"], x, true_vocab=cfg.vocab), state

@@ -1,0 +1,443 @@
+"""Generic decoder-only LM covering the assigned-architecture matrix.
+
+One config class + one code path handles: dense (gemma2/gemma3/starcoder2/
+qwen), MoE (olmoe), MLA+MoE (deepseek-v2-lite), and the VLM backbone
+(internvl2 — the ViT frontend is a stub supplying precomputed patch
+embeddings, per the task spec).  Layers are scanned in *pattern groups*
+(e.g. gemma2's (local, global) pair, gemma3's 5xlocal+global) so the HLO
+stays compact and per-position params stack along a leading "layers" axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    norm: str = "rmsnorm"
+    act: str = "silu"
+    gated: bool = True
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    rope_base: float = 10_000.0
+    rope_base_local: float = 0.0  # 0 -> same as rope_base (gemma3: 10k local/1M global)
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    embed_scale: bool = False
+    post_norms: bool = False  # gemma2: extra norms after attn/mlp outputs
+    layer_pattern: tuple = ("g",)  # cycled; "l" = local window, "g" = global
+    window: int = 0
+    query_scale: float = 0.0
+    moe: Optional[L.MoEConfig] = None
+    moe_dispatch: str = "sorted"  # "sorted" (SCV-style) | "dense"
+    first_dense: int = 0  # deepseek: leading dense-FFN layers
+    first_dense_ff: int = 0
+    mla: Optional[L.MLAConfig] = None
+    n_frontend_tokens: int = 0  # vlm: image tokens prepended (stub embeds)
+    kv_quant: bool = False  # int8 KV cache (qwen's MHA cache, DESIGN.md §5)
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def pattern_len(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def n_rep(self) -> int:
+        body = self.n_layers - self.first_dense
+        assert body % self.pattern_len == 0, (self.n_layers, self.layer_pattern)
+        return body // self.pattern_len
+
+    def attn_cfg(self, kind: str) -> L.AttnConfig:
+        local = kind == "l"
+        base = (
+            self.rope_base_local
+            if (local and self.rope_base_local)
+            else self.rope_base
+        )
+        return L.AttnConfig(
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim,
+            d_model=self.d_model,
+            rope_base=base,
+            qkv_bias=self.qkv_bias,
+            logit_softcap=self.attn_softcap,
+            window=self.window if local else 0,
+            query_scale=self.query_scale,
+        )
+
+    def param_count(self) -> int:
+        """Total parameters (for 6ND roofline bookkeeping)."""
+        import numpy as np
+
+        def count(init_out):
+            params, _ = L.split_tree(init_out)
+            return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+        # cheap: init with a fixed key on abstract eval
+        shapes = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), self)[0])
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE discounts inactive experts)."""
+        import numpy as np
+
+        shapes = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), self)[0])
+        total = 0
+        for path, x in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            n = int(np.prod(x.shape))
+            keys = "/".join(str(getattr(k, "key", k)) for k in path)
+            if self.moe and ("/wi" in keys or "/wg" in keys or "/wo" in keys) and "moe" in keys:
+                n = n * self.moe.top_k // self.moe.n_experts
+            total += n
+        return total
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    return L.init_rmsnorm(d) if cfg.norm == "rmsnorm" else L.init_layernorm(d)
+
+
+def _apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return L.rmsnorm(p, x)
+    return L.layernorm(p, x)
+
+
+def _init_block(key, cfg: LMConfig, kind: str, dense_ff: int = 0):
+    """One layer's params: norms + attention (or MLA) + FFN (or MoE)."""
+    ks = jax.random.split(key, 4)
+    p = {"ln_attn": _init_norm(cfg), "ln_mlp": _init_norm(cfg)}
+    if cfg.post_norms:
+        p["ln_attn_post"] = _init_norm(cfg)
+        p["ln_mlp_post"] = _init_norm(cfg)
+    if cfg.mla is not None:
+        p["attn"] = L.init_mla(ks[0], cfg.mla)
+    else:
+        p["attn"] = L.init_attention(ks[0], cfg.attn_cfg(kind))
+    if dense_ff:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, dense_ff, cfg.gated)
+    elif cfg.moe is not None:
+        p["moe"] = L.init_moe(ks[1], cfg.moe)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.gated)
+    return p
+
+
+def _stacked_init(init_fn, key, n):
+    keys = jax.random.split(key, n)
+    _, specs = L.split_tree(init_fn(keys[0]))
+    params = jax.vmap(lambda k: L.split_tree(init_fn(k))[0])(keys)
+    specs = jax.tree.map(
+        lambda ax: ("layers",) + ax,
+        specs,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    return params, specs
+
+
+def init_lm(key, cfg: LMConfig):
+    """Returns (params, specs)."""
+    ks = jax.random.split(key, 4 + cfg.first_dense)
+    tree = {
+        "embed": L.init_embed(ks[0], cfg.vocab, cfg.d_model),
+        "ln_final": _init_norm(cfg),
+    }
+    params, specs = L.split_tree(tree)
+    blocks_p, blocks_s = {}, {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        bp, bs = _stacked_init(
+            lambda k, kind=kind: _init_block(k, cfg, kind), ks[1 + i % 3], cfg.n_rep
+        )
+        blocks_p[f"pos{i}"] = bp
+        blocks_s[f"pos{i}"] = bs
+    params["blocks"] = blocks_p
+    specs["blocks"] = blocks_s
+    for j in range(cfg.first_dense):
+        hp, hs = L.split_tree(
+            _init_block(ks[4 + j], cfg, "g", dense_ff=cfg.first_dense_ff or cfg.d_ff)
+        )
+        params[f"head{j}"] = hp
+        specs[f"head{j}"] = hs
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(p, x, cfg: LMConfig, kind, positions, cache=None, dense_ff=False):
+    acfg = cfg.attn_cfg(kind)
+    h = _apply_norm(cfg, p["ln_attn"], x)
+    if cfg.mla is not None:
+        a, new_cache = L.mla_attention(p["attn"], h, cfg.mla, positions, cache)
+    else:
+        a, new_cache = L.attention(p["attn"], h, acfg, positions, cache)
+    if cfg.post_norms:
+        a = _apply_norm(cfg, p["ln_attn_post"], a)
+    x = x + a
+    h = _apply_norm(cfg, p["ln_mlp"], x)
+    aux = 0.0
+    if "moe" in p and not dense_ff:
+        fn = L.moe_sorted if cfg.moe_dispatch == "sorted" else L.moe_dense
+        m, aux = fn(p["moe"], h, cfg.moe)
+    else:
+        m = L.mlp(p["mlp"], h, cfg.act)
+    if cfg.post_norms:
+        m = _apply_norm(cfg, p["ln_mlp_post"], m)
+    x = x + m
+    return x, new_cache, aux
+
+
+def _activation_sharding(x):
+    """Residual-stream constraint: batch over (pod,data), features over
+    model — applied when a mesh is active (no-op otherwise)."""
+    from repro.train.sharding import constrain
+
+    return constrain(x, ("batch", None, "embed"))
+
+
+def hidden_states(
+    params,
+    cfg: LMConfig,
+    tokens,
+    positions=None,
+    extra_embed=None,
+    caches=None,
+    decode=False,
+):
+    """Run embedding + all blocks.  Returns (hidden, new_caches, aux_sum).
+
+    extra_embed: [B, n_front, d_model] stub frontend embeddings (vlm/audio),
+    prepended before the token embeddings.
+    caches: pytree from init_cache() for decode; None otherwise.
+    """
+    x = L.embed(params["embed"], tokens, scale=cfg.embed_scale).astype(cfg.dtype)
+    if extra_embed is not None:
+        x = jnp.concatenate([extra_embed.astype(cfg.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _activation_sharding(x)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    # leading special (dense) layers — deepseek's first_dense
+    for j in range(cfg.first_dense):
+        c = caches[f"head{j}"] if caches is not None else None
+        apply = _block_apply if caches is not None else jax.checkpoint(
+            _block_apply, static_argnums=(2, 3, 6)
+        )
+        x, nc, aux = apply(
+            params[f"head{j}"], x, cfg, "g", positions, c, True
+        )
+        aux_total += aux
+        if caches is not None:
+            caches = dict(caches)
+            caches[f"head{j}"] = nc
+
+    blocks = params["blocks"]
+
+    def group_fn(x, grp_params, grp_caches):
+        new_caches = {}
+        aux = 0.0
+        for i, kind in enumerate(cfg.layer_pattern):
+            c = grp_caches[f"pos{i}"] if grp_caches is not None else None
+            x, nc, a = _block_apply(grp_params[f"pos{i}"], x, cfg, kind, positions, c)
+            x = _activation_sharding(x)
+            aux += a
+            if nc is not None:
+                new_caches[f"pos{i}"] = nc
+        return x, (new_caches if new_caches else None), aux
+
+    if caches is None:
+        group = jax.checkpoint(lambda x, gp: group_fn(x, gp, None)[::2])
+
+        def body(carry, gp):
+            x, aux = carry
+            x, a = group(x, gp)
+            return (x, aux + a), None
+
+        (x, aux_total2), _ = jax.lax.scan(body, (x, aux_total), blocks)
+        aux_total = aux_total2
+        new_caches = None
+    else:
+        # Cache lives in the CARRY (not xs/ys): per-layer slices are read
+        # with dynamic_slice and written back with dynamic_update_slice, so
+        # XLA updates the (multi-GB) stacked cache IN PLACE instead of
+        # double-buffering a ys copy — §Perf decode iteration 1.
+        stacked = caches["blocks"]
+
+        def take(tree, i):
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                tree,
+            )
+
+        def put(tree, sub, i):
+            return jax.tree.map(
+                lambda a, s: jax.lax.dynamic_update_index_in_dim(a, s, i, 0),
+                tree,
+                sub,
+            )
+
+        def body(carry, xs):
+            x, aux, cstack = carry
+            gp, i = xs
+            x, nc, a = group_fn(x, gp, take(cstack, i))
+            return (x, aux + a, put(cstack, nc, i)), None
+
+        (x, aux_total, stacked_caches), _ = jax.lax.scan(
+            body,
+            (x, aux_total, stacked),
+            (blocks, jnp.arange(cfg.n_rep, dtype=jnp.int32)),
+        )
+        new_caches = dict(caches)
+        new_caches["blocks"] = stacked_caches
+
+    x = _apply_norm(cfg, params["ln_final"], x)
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# task heads
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params, cfg: LMConfig, batch, aux_weight=0.01):
+    """Next-token CE (+ MoE aux).  batch: {"tokens": [B,S] int32,
+    "extra_embed": optional [B,n,front]}."""
+    tokens = batch["tokens"]
+    extra = batch.get("extra_embed")
+    x, _, aux = hidden_states(params, cfg, tokens[:, :-1], extra_embed=extra)
+    if extra is not None:
+        x = x[:, extra.shape[1] :]  # loss only on text positions
+    loss = L.chunked_softmax_xent(
+        params["embed"], x, tokens[:, 1:], softcap=cfg.final_softcap,
+        true_vocab=cfg.vocab,
+    )
+    return loss + aux_weight * aux
+
+
+def init_cache(cfg: LMConfig, batch, max_len, dtype=None):
+    """KV caches.  Local (windowed) layers use a ring buffer of size
+    min(window, max_len) — the sliding-window truncation that halves
+    gemma2/gemma3 decode cache (DESIGN.md §5)."""
+    dtype = dtype or cfg.dtype
+    K, D = cfg.n_kv_heads, cfg.head_dim
+
+    def one(kind):
+        if cfg.mla is not None:
+            R = cfg.mla.kv_lora_rank
+            c = {
+                "ckv": jnp.zeros(
+                    (batch, max_len, R), jnp.int8 if cfg.kv_quant else dtype
+                ),
+                "krope": jnp.zeros((batch, max_len, cfg.mla.qk_rope_dim), dtype),
+                "len": jnp.zeros((), jnp.int32),
+            }
+            if cfg.kv_quant:
+                c["ckv_scale"] = jnp.zeros((batch, max_len), jnp.float32)
+            return c
+        size = min(cfg.window, max_len) if (kind == "l" and cfg.window) else max_len
+        kv_dtype = jnp.int8 if cfg.kv_quant else dtype
+        c = {
+            "k": jnp.zeros((batch, size, K, D), kv_dtype),
+            "v": jnp.zeros((batch, size, K, D), kv_dtype),
+            "pos": jnp.full((size,), 2**30, jnp.int32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+        if cfg.kv_quant:
+            c["k_scale"] = jnp.zeros((batch, size, K), jnp.float32)
+            c["v_scale"] = jnp.zeros((batch, size, K), jnp.float32)
+        return c
+
+    caches = {
+        "blocks": {
+            f"pos{i}": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_rep,) + a.shape)
+                if a.ndim
+                else jnp.broadcast_to(a, (cfg.n_rep,)),
+                one(kind),
+            )
+            for i, kind in enumerate(cfg.layer_pattern)
+        }
+    }
+    for j in range(cfg.first_dense):
+        caches[f"head{j}"] = one("g")
+    return caches
+
+
+def prefill(params, cfg: LMConfig, tokens, extra_embed=None, max_len=None):
+    """Prefill: runs hidden_states writing into fresh caches sized
+    max_len (>= prompt length + decode budget)."""
+    B = tokens.shape[0]
+    S = tokens.shape[1] + (extra_embed.shape[1] if extra_embed is not None else 0)
+    max_len = max_len or S
+    caches = init_cache(cfg, B, max_len)
+    x, caches, _ = hidden_states(
+        params, cfg, tokens, extra_embed=extra_embed, caches=caches
+    )
+    logits = L.unembed_logits(params["embed"], x[:, -1:], cfg.final_softcap, true_vocab=cfg.vocab)
+    return logits, caches
+
+
+def decode_step(params, cfg: LMConfig, token, caches, pos):
+    """One decode step.  token: [B,1] int32; pos: [B,1] absolute position."""
+    x, caches, _ = hidden_states(
+        params, cfg, token, positions=pos, caches=caches, decode=True
+    )
+    logits = L.unembed_logits(params["embed"], x, cfg.final_softcap, true_vocab=cfg.vocab)
+    return logits, caches
+
+
+def cache_specs(cfg: LMConfig):
+    """Logical-axes tree mirroring init_cache() for sharding resolution."""
+
+    def one():
+        if cfg.mla is not None:
+            c = {
+                "ckv": ("layers", "batch", "seq", "mla_rank"),
+                "krope": ("layers", "batch", "seq", "head_dim"),
+                "len": ("layers",),
+            }
+            if cfg.kv_quant:
+                c["ckv_scale"] = ("layers", "batch", "seq")
+            return c
+        c = {
+            "k": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+            "v": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+            "pos": ("layers", "seq"),
+            "len": ("layers",),
+        }
+        if cfg.kv_quant:
+            c["k_scale"] = ("layers", "batch", "seq", "kv_heads")
+            c["v_scale"] = ("layers", "batch", "seq", "kv_heads")
+        return c
+
+    specs = {"blocks": {f"pos{i}": one() for i in range(cfg.pattern_len)}}
+    for j in range(cfg.first_dense):
+        specs[f"head{j}"] = jax.tree.map(
+            lambda ax: ax[1:], one(), is_leaf=lambda x: isinstance(x, tuple)
+        )
+    return specs

@@ -1,0 +1,85 @@
+"""Batched serving engine: continuous prefill + decode over a request
+queue.
+
+Small-but-real serving logic exercised by examples/serve_lm.py and the
+integration tests: requests arrive with prompts, get batched up to
+``max_batch``, prefilled together (padded to the bucket), then decoded
+token-by-token with per-slot stopping.  On the production mesh the same
+engine runs with the sharded decode_step (launch/serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # int32[prompt_len]
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 4
+    max_len: int = 128
+    greedy: bool = True
+
+
+class ServeEngine:
+    """Drives (prefill_fn, decode_fn) over batches of requests.
+
+    prefill_fn(params, tokens[B,S]) -> (logits[B,1,V], state)
+    decode_fn(params, state, token[B,1], pos[B,1]) -> (logits, state)
+    """
+
+    def __init__(self, params, prefill_fn, decode_fn, cfg: EngineConfig):
+        self.params = params
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.cfg = cfg
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _pick(self, logits) -> np.ndarray:
+        if self.cfg.greedy:
+            return np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
+        raise NotImplementedError
+
+    def run(self) -> list[Request]:
+        while self.queue:
+            batch = self.queue[: self.cfg.max_batch]
+            self.queue = self.queue[self.cfg.max_batch :]
+            plen = max(len(r.prompt) for r in batch)
+            B = len(batch)
+            toks = np.zeros((B, plen), np.int32)
+            for i, r in enumerate(batch):
+                toks[i, plen - len(r.prompt) :] = r.prompt  # left-pad
+            logits, state = self.prefill_fn(self.params, jnp.asarray(toks))
+            nxt = self._pick(logits)
+            for i, r in enumerate(batch):
+                r.out.append(int(nxt[i]))
+            max_new = max(r.max_new for r in batch)
+            for step in range(1, max_new):
+                pos = jnp.full((B, 1), plen + step - 1, jnp.int32)
+                logits, state = self.decode_fn(
+                    self.params, state, jnp.asarray(nxt)[:, None], pos
+                )
+                nxt = self._pick(logits)
+                for i, r in enumerate(batch):
+                    if len(r.out) < r.max_new:
+                        r.out.append(int(nxt[i]))
+            for r in batch:
+                r.done = True
+                self.completed.append(r)
+        return self.completed

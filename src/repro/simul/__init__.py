@@ -1,0 +1,17 @@
+"""Reproduction of the paper's §V evaluation methodology."""
+from repro.simul.datasets import TABLE_I, GraphData, dataset_names, load
+from repro.simul.machine import MachineConfig
+from repro.simul.memory import DramConfig
+from repro.simul.sim import SimResult, geomean, simulate
+
+__all__ = [
+    "TABLE_I",
+    "GraphData",
+    "dataset_names",
+    "load",
+    "MachineConfig",
+    "DramConfig",
+    "SimResult",
+    "geomean",
+    "simulate",
+]

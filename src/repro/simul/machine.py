@@ -1,0 +1,168 @@
+"""Compute-cycle model of the queue-based vector processor (paper §IV/V).
+
+The paper's tool processes the streamed dataflow "cycle-wise to determine
+the number of MACs ... and on-chip SRAM reads/writes"; we reproduce it with
+a vectorized event model whose assumptions are stated inline:
+
+* One nonzero a_ij contributes a scalar x vector FMA over the feature row:
+  cost c = ceil(F / N_PE) VPE-cycles.  MAC count = nnz * F for every
+  sparse format — the paper's iso-MAC discipline (BCSR is the deliberate
+  exception: dense blocks do B*B*F MACs per block, its §II-B.3 liability).
+
+* Scheduling is modeled with critical-path / barrier bounds (standard
+  makespan lower bounds, tight here because entry costs are uniform):
+
+  - CSR processes one output row at a time ("PS is computed before moving
+    on to the next row", §II-B.2): a row with k nonzeros spans
+    ceil(k / N_VPE) issue slots; other rows cannot overlap because the
+    dataflow is row-sequential.  Ultra-sparse graphs (avg degree ~ a few)
+    leave most VPEs idle in every slot — Fig. 8's idle-cycle story.
+
+  - CSC streams entries column by column but statically owns output row i
+    on VPE (i mod N_VPE) (§V-B "map a fixed set of output rows to a PE"):
+    makespan = max(ideal, max VPE ownership load).  Power-law hub rows
+    skew the ownership loads.
+
+  - SCV's arbiter assigns entries greedily to any free VPE; the only
+    serialization is per-output-row (same address -> same queue, §IV-B),
+    so makespan = max(ideal, deg_max * c) — near-ideal unless one row
+    outweighs 1/N_VPE of the matrix.  This is the paper's hazard-free-
+    parallelism claim reduced to its scheduling consequence.
+
+* MP (§II-B.4) re-scans the adjacency once per pass; passes are determined
+  by how many Z rows fit in cache; each scan costs one arbiter cycle per
+  skipped entry (work is "increased computation workload").
+
+All models return VPE-cycles; idle = N_VPE * makespan - busy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.formats import COOMatrix
+
+HAZARD_WINDOW = 3  # cycles: 2-cycle write-to-read latency + issue (§IV-B)
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineConfig:
+    n_vpe: int = 8
+    n_pe: int = 64
+    queue_depth: int = 16
+    mem_a_bytes: int = 64 * 1024  # adjacency partition of local memory
+    mem_z_bytes: int = 64 * 1024  # combined-feature partition
+    mem_ps_bytes: int = 256 * 1024  # partial-sum partition
+    cache_bytes: int = 2 * 1024 * 1024
+    cache_line: int = 64
+    dram_gbps: float = 1.0  # paper: Ramulator HBM default, 1 Gb/s noted
+    bytes_per_elem: int = 4
+
+    @property
+    def total_macs_per_cycle(self) -> int:
+        return self.n_vpe * self.n_pe
+
+
+@dataclasses.dataclass
+class ComputeResult:
+    cycles: float  # makespan in cycles
+    busy: float  # sum of VPE busy cycles
+    idle: float  # N_VPE * makespan - busy
+    macs: float
+
+
+def _entry_cost(f: int, cfg: MachineConfig) -> int:
+    return -(-f // cfg.n_pe)
+
+
+def compute_entry_stream(
+    rows_in_order: np.ndarray, f: int, cfg: MachineConfig
+) -> ComputeResult:
+    """SCV (and CSB-like) greedy queue scheduling: near-ideal makespan;
+    the only critical path is a single output row's serialized updates."""
+    c = _entry_cost(f, cfg)
+    nnz = len(rows_in_order)
+    busy = float(nnz) * c
+    ideal = busy / cfg.n_vpe
+    deg_max = int(np.bincount(rows_in_order.astype(np.int64)).max()) if nnz else 0
+    makespan = max(ideal, deg_max * c)
+    return ComputeResult(
+        cycles=makespan,
+        busy=busy,
+        idle=cfg.n_vpe * makespan - busy,
+        macs=float(nnz) * f,
+    )
+
+
+def compute_csc_fixed_rows(
+    rows_in_order: np.ndarray, f: int, cfg: MachineConfig
+) -> ComputeResult:
+    """CSC: output row i is owned by VPE (i % N_VPE) (§V-B fixed mapping):
+    makespan = max ownership load (hub rows skew it)."""
+    c = _entry_cost(f, cfg)
+    nnz = len(rows_in_order)
+    busy = float(nnz) * c
+    loads = np.bincount(rows_in_order % cfg.n_vpe, minlength=cfg.n_vpe) * c
+    makespan = max(busy / cfg.n_vpe, float(loads.max()))
+    return ComputeResult(
+        cycles=makespan,
+        busy=busy,
+        idle=cfg.n_vpe * makespan - busy,
+        macs=float(nnz) * f,
+    )
+
+
+def compute_csr_row_barrier(
+    row_nnz: np.ndarray, f: int, cfg: MachineConfig
+) -> ComputeResult:
+    """CSR: one output row at a time; a row with k nonzeros fills
+    ceil(k / N_VPE) issue slots and the remaining VPE slots idle
+    (§II-B.2 row-sequential dataflow + §V-B imbalance discussion)."""
+    c = _entry_cost(f, cfg)
+    active = row_nnz[row_nnz > 0].astype(np.int64)
+    slots = -(-active // cfg.n_vpe)  # ceil
+    makespan = float(slots.sum()) * c
+    busy = float(active.sum()) * c
+    return ComputeResult(
+        cycles=makespan,
+        busy=busy,
+        idle=cfg.n_vpe * makespan - busy,
+        macs=float(active.sum()) * f,
+    )
+
+
+def compute_bcsr_blocks(
+    n_blocks: int, block: int, f: int, cfg: MachineConfig
+) -> ComputeResult:
+    """BCSR: dense B x B blocks — every stored zero is a real MAC."""
+    c = _entry_cost(f, cfg)
+    per_block = block * block * c  # dense MACs over the block
+    busy = float(n_blocks) * per_block
+    # blocks parallelize cleanly (regular): idle only from the tail
+    makespan = -(-n_blocks // cfg.n_vpe) * per_block
+    return ComputeResult(
+        cycles=float(makespan),
+        busy=busy,
+        idle=cfg.n_vpe * makespan - busy,
+        macs=float(n_blocks) * block * block * f,
+    )
+
+
+def compute_multipass(
+    rows_in_order: np.ndarray,
+    n_passes: int,
+    nnz: int,
+    f: int,
+    cfg: MachineConfig,
+) -> ComputeResult:
+    """MP: CSC-like compute + one arbiter scan cycle per deferred entry per
+    pass (the "increased computation workload" of §II-B.4)."""
+    base = compute_entry_stream(rows_in_order, f, cfg)
+    rescan = float(nnz) * max(0, n_passes - 1) / cfg.n_vpe
+    return ComputeResult(
+        cycles=base.cycles + rescan,
+        busy=base.busy,
+        idle=base.idle + rescan * cfg.n_vpe,
+        macs=base.macs,
+    )

@@ -1,0 +1,12 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_sparse(rng, m, n, density):
+    a = (rng.random((m, n)) < density).astype(np.float32)
+    return a * rng.standard_normal((m, n)).astype(np.float32)

@@ -1,0 +1,108 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + finite values (task spec requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.optim.adam import AdamConfig, init_adam
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_train_step(arch):
+    spec = ARCHS[arch]
+    cfg = spec.cfg(reduced=True)
+    params, _ = spec.init(jax.random.PRNGKey(0), reduced=True)
+    B, S = 2, 16
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)}
+    nfront = getattr(cfg, "n_frontend_tokens", 0)
+    if nfront:
+        batch["extra_embed"] = jnp.asarray(
+            rng.standard_normal((B, nfront, cfg.d_model)), jnp.float32
+        )
+    if spec.kind == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.float32
+        )
+
+    opt = init_adam(params)
+    step = spec.make_train_step(AdamConfig(lr=1e-3, warmup_steps=1, total_steps=10), reduced=True)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0, (arch, loss)
+    assert int(new_opt["step"]) == 1
+    # params actually changed and stayed finite
+    delta = sum(
+        float(jnp.abs(a - b).sum())
+        for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(params))
+    )
+    assert np.isfinite(delta) and delta > 0, arch
+    for leaf in jax.tree.leaves(new_params):
+        assert bool(jnp.all(jnp.isfinite(leaf))), arch
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a, s in ARCHS.items() if s.kind in ("lm", "mamba_lm", "hybrid")]
+)
+def test_reduced_decode_consistency(arch):
+    """Prefill+decode logits == direct forward logits (reduced configs)."""
+    spec = ARCHS[arch]
+    cfg = spec.cfg(reduced=True)
+    params, _ = spec.init(jax.random.PRNGKey(0), reduced=True)
+    rng = np.random.default_rng(1)
+    B, S = 2, 10
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    if spec.kind == "lm":
+        from repro.models import layers as L
+        from repro.models.transformer import decode_step, hidden_states, prefill
+
+        _, cache = prefill(params, cfg, toks[:, : S - 1], max_len=S + 4)
+        logits, _ = decode_step(
+            params, cfg, toks[:, S - 1 :], cache, jnp.full((B, 1), S - 1, jnp.int32)
+        )
+        x, _, _ = hidden_states(params, cfg, toks)
+        direct = L.unembed_logits(params["embed"], x[:, -1:], cfg.final_softcap, true_vocab=cfg.vocab)
+    elif spec.kind == "mamba_lm":
+        from repro.models import layers as L
+        from repro.models.ssm import (init_mamba2_lm_state, mamba2_lm_decode,
+                                      mamba2_lm_hidden)
+
+        st = init_mamba2_lm_state(cfg, B)
+        logits = None
+        for t in range(S):
+            logits, st = mamba2_lm_decode(params, cfg, toks[:, t : t + 1], st)
+        x, _ = mamba2_lm_hidden(params, cfg, toks)
+        direct = L.unembed_logits(params["embed"], x[:, -1:], true_vocab=cfg.vocab)
+    else:
+        from repro.models import layers as L
+        from repro.models.hybrid import decode_step as hds, hidden_states as hhs, init_state
+
+        st = init_state(cfg, B, S + 4)
+        logits = None
+        for t in range(S):
+            logits, st = hds(params, cfg, toks[:, t : t + 1], st, jnp.full((B, 1), t, jnp.int32))
+        x, _ = hhs(params, cfg, toks)
+        direct = L.unembed_logits(params["embed"], x[:, -1:], true_vocab=cfg.vocab)
+
+    lp = jax.nn.log_softmax(logits)
+    ld = jax.nn.log_softmax(direct)
+    # mask padded vocab (-inf rows) before compare
+    err = float(jnp.abs(jnp.where(jnp.isfinite(lp), lp - ld, 0.0)).max())
+    # MoE capacity drops can perturb slightly; dense archs are tight
+    tol = 5e-2 if getattr(cfg, "moe", None) else 5e-3
+    assert err < tol, (arch, err)
+
+
+def test_registry_complete():
+    assert len(ARCHS) == 10
+    kinds = {s.kind for s in ARCHS.values()}
+    assert kinds == {"lm", "mamba_lm", "hybrid", "encdec"}
+    # shape-cell accounting: 32 runnable cells (spec: 40 - 8 long_500k skips)
+    cells = sum(len(s.shapes) for s in ARCHS.values())
+    assert cells == 32
+    for s in ARCHS.values():
+        if "long_500k" not in s.shapes:
+            assert s.skip_notes, s.name

@@ -1,0 +1,116 @@
+"""Property tests: every sparse format aggregates identically to the dense
+oracle, and all conversions round-trip."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ROW_MAJOR,
+    ZMORTON,
+    aggregate,
+    coo_from_dense,
+    coo_to_bcsr,
+    coo_to_csb,
+    coo_to_csc,
+    coo_to_csr,
+    coo_to_scv,
+    coo_to_scv_tiles,
+    csc_to_coo,
+    csr_to_coo,
+)
+
+
+def _dense(seed, m, n, density):
+    rng = np.random.default_rng(seed)
+    return ((rng.random((m, n)) < density) * rng.standard_normal((m, n))).astype(
+        np.float32
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    m=st.integers(1, 70),
+    n=st.integers(1, 70),
+    density=st.floats(0.0, 0.3),
+    block=st.sampled_from([4, 8, 16]),
+    f=st.sampled_from([1, 5, 32]),
+)
+def test_all_formats_match_dense(seed, m, n, density, block, f):
+    a = _dense(seed, m, n, density)
+    coo = coo_from_dense(a)
+    z = np.random.default_rng(seed + 1).standard_normal((n, f)).astype(np.float32)
+    ref = a @ z
+    formats = [
+        coo,
+        coo_to_csr(coo),
+        coo_to_csc(coo),
+        coo_to_bcsr(coo, block),
+        coo_to_scv(coo, block, ROW_MAJOR),
+        coo_to_scv(coo, block, ZMORTON),
+        coo_to_scv_tiles(coo, block),
+    ]
+    for fmt in formats:
+        out = np.asarray(aggregate(fmt, jnp.asarray(z)))
+        np.testing.assert_allclose(out, ref, atol=5e-4, rtol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    m=st.integers(1, 60),
+    n=st.integers(1, 60),
+    density=st.floats(0.0, 0.4),
+    block=st.sampled_from([4, 8]),
+)
+def test_roundtrips(seed, m, n, density, block):
+    a = _dense(seed, m, n, density)
+    coo = coo_from_dense(a)
+    assert np.allclose(csr_to_coo(coo_to_csr(coo)).to_dense(), a)
+    assert np.allclose(csc_to_coo(coo_to_csc(coo)).to_dense(), a)
+    for order in (ROW_MAJOR, ZMORTON):
+        scv = coo_to_scv(coo, block, order)
+        assert np.allclose(scv.to_coo().dedup().to_dense(), a)
+        assert scv.nnz == coo.nnz
+    tiles = coo_to_scv_tiles(coo, block)
+    assert np.allclose(tiles.to_coo().dedup().to_dense(), a)
+    assert tiles.nnz == coo.nnz
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    m=st.integers(2, 64),
+    block=st.sampled_from([4, 8, 16]),
+)
+def test_csb_column_major_within_block(seed, m, block):
+    """SCV discipline: entries within a block are stored column-major."""
+    a = _dense(seed, m, m, 0.2)
+    coo = coo_from_dense(a)
+    csb = coo_to_csb(coo, block, block)
+    for b in range(csb.n_blocks):
+        s, e = csb.blk_ptr[b], csb.blk_ptr[b + 1]
+        key = csb.col_id[s:e].astype(np.int64) * block + csb.row_id[s:e]
+        assert np.all(np.diff(key) > 0), "within-block order must be (col, row)"
+
+
+def test_scv_index_bits():
+    a = _dense(0, 128, 128, 0.05)
+    scv = coo_to_scv(coo_from_dense(a), 64, ZMORTON)
+    assert scv.index_bits_per_entry == 6  # log2(64) < log2(128*128)
+
+
+def test_tiles_row_grouping_invariant():
+    """Kernel schedule invariant: equal tile_row values are contiguous."""
+    a = _dense(3, 200, 180, 0.03)
+    tiles = coo_to_scv_tiles(coo_from_dense(a), 16)
+    tr = tiles.tile_row
+    # each row id appears in exactly one contiguous run
+    change = np.flatnonzero(np.diff(tr) != 0)
+    runs = np.split(tr, change + 1)
+    seen = set()
+    for run in runs:
+        v = run[0]
+        assert v not in seen
+        seen.add(v)

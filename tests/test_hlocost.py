@@ -1,0 +1,77 @@
+"""The trip-count-corrected HLO cost analyzer (launch/hlocost.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlocost import analyze
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def f(x, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    for n in [1, 4, 9]:
+        c = _compile(
+            f,
+            jax.ShapeDtypeStruct((128, 128), jnp.float32),
+            jax.ShapeDtypeStruct((n, 128, 128), jnp.float32),
+        )
+        t = analyze(c.as_text())
+        assert t.flops == pytest.approx(2 * 128**3 * n, rel=0.01), n
+
+
+def test_nested_scan():
+    def g(x, ws):
+        def outer(x, w2):
+            def inner(x, w):
+                return x @ w, None
+            x, _ = jax.lax.scan(inner, x, w2)
+            return x, None
+        x, _ = jax.lax.scan(outer, x, ws)
+        return x
+
+    c = _compile(
+        g,
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((3, 5, 64, 64), jnp.float32),
+    )
+    t = analyze(c.as_text())
+    assert t.flops == pytest.approx(2 * 64**3 * 15, rel=0.01)
+
+
+def test_bytes_scale_with_trips():
+    def f(x, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    outs = []
+    for n in [2, 8]:
+        c = _compile(
+            f,
+            jax.ShapeDtypeStruct((128, 128), jnp.float32),
+            jax.ShapeDtypeStruct((n, 128, 128), jnp.float32),
+        )
+        outs.append(analyze(c.as_text()).hbm_bytes)
+    assert outs[1] > 2.5 * outs[0]  # roughly linear in trip count
+
+
+def test_batched_dot_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    c = _compile(
+        f,
+        jax.ShapeDtypeStruct((4, 32, 48), jnp.float32),
+        jax.ShapeDtypeStruct((4, 48, 16), jnp.float32),
+    )
+    t = analyze(c.as_text())
+    assert t.flops == pytest.approx(2 * 4 * 32 * 48 * 16, rel=0.01)

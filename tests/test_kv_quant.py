@@ -1,0 +1,59 @@
+"""int8 KV-cache quantization (qwen's 5.5 TB MHA cache; DESIGN.md §5)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import layers as L
+from repro.models.transformer import decode_step, hidden_states, init_cache, prefill
+
+
+def _setup(kv_quant):
+    spec = ARCHS["qwen1.5-32b"]
+    cfg = dataclasses.replace(spec.cfg(reduced=True), kv_quant=kv_quant)
+    params, _ = spec.init(jax.random.PRNGKey(0), reduced=True)
+    return cfg, params
+
+
+def test_cache_dtype_and_size():
+    cfg, _ = _setup(True)
+    c = init_cache(cfg, 2, 32)
+    leaf = c["blocks"]["pos0"]
+    assert leaf["k"].dtype == jnp.int8
+    assert "k_scale" in leaf and leaf["k_scale"].dtype == jnp.float32
+    # int8 + f32/head scale ~= 0.5x of bf16 + negligible
+    bf16 = init_cache(dataclasses.replace(cfg, kv_quant=False), 2, 32)
+    b_q = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c))
+    b_f = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(bf16))
+    assert b_q < 0.6 * b_f
+
+
+def test_quantized_decode_close_and_argmax_stable():
+    cfg, params = _setup(True)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    _, cache = prefill(params, cfg, toks[:, :11], max_len=16)
+    logits, _ = decode_step(
+        params, cfg, toks[:, 11:], cache, jnp.full((2, 1), 11, jnp.int32)
+    )
+    x, _, _ = hidden_states(params, cfg, toks)
+    direct = L.unembed_logits(params["embed"], x[:, -1:], true_vocab=cfg.vocab)
+    lp, ld = jax.nn.log_softmax(logits), jax.nn.log_softmax(direct)
+    err = float(jnp.abs(jnp.where(jnp.isfinite(lp), lp - ld, 0)).max())
+    assert err < 0.15, err  # lossy but tight
+    assert bool(jnp.all(jnp.argmax(logits, -1) == jnp.argmax(direct, -1)))
+
+
+def test_quantized_multi_step_decode_stays_close():
+    cfg_q, params = _setup(True)
+    cfg_f = dataclasses.replace(cfg_q, kv_quant=False)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0, cfg_q.vocab)
+    _, cq = prefill(params, cfg_q, toks[:, :3], max_len=16)
+    _, cf = prefill(params, cfg_f, toks[:, :3], max_len=16)
+    for t in range(3, 6):
+        pos = jnp.full((1, 1), t, jnp.int32)
+        lq, cq = decode_step(params, cfg_q, toks[:, t : t + 1], cq, pos)
+        lf, cf = decode_step(params, cfg_f, toks[:, t : t + 1], cf, pos)
+    err = float(jnp.abs(jax.nn.log_softmax(lq) - jax.nn.log_softmax(lf)).max())
+    assert err < 0.2, err

@@ -1,0 +1,66 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.morton import morton_decode, morton_encode, morton_order, zcurve_tiles
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2**20), st.integers(0, 2**20)), min_size=1, max_size=200))
+def test_encode_decode_roundtrip(coords):
+    r = np.array([c[0] for c in coords], np.int64)
+    c = np.array([c[1] for c in coords], np.int64)
+    rr, cc = morton_decode(morton_encode(r, c))
+    assert np.array_equal(r, rr) and np.array_equal(c, cc)
+
+
+def test_no_collisions_exhaustive():
+    r = np.repeat(np.arange(128), 128)
+    c = np.tile(np.arange(128), 128)
+    assert len(np.unique(morton_encode(r, c))) == 128 * 128
+
+
+def test_canonical_curve_order():
+    # top-left, top-right, bottom-left, bottom-right (Fig. 2(e))
+    tiles = [tuple(t) for t in zcurve_tiles(2, 2)]
+    assert tiles == [(0, 0), (0, 1), (1, 0), (1, 1)]
+    tiles4 = [tuple(t) for t in zcurve_tiles(4, 4)]
+    assert tiles4[:4] == [(0, 0), (0, 1), (1, 0), (1, 1)]
+    assert tiles4[4:8] == [(0, 2), (0, 3), (1, 2), (1, 3)]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 9))
+def test_zcurve_tiles_cover(nr, nc):
+    tiles = zcurve_tiles(nr, nc)
+    assert len(tiles) == nr * nc
+    assert len({tuple(t) for t in tiles}) == nr * nc
+
+
+def test_locality_vs_rowmajor():
+    """Z order has better 2-D locality than row-major: any window of W
+    consecutive curve points touches ~2*sqrt(W) distinct rows+cols, vs up
+    to W cols for row-major (paper §III-C: "any subsequence ... preserves
+    data locality")."""
+    n = 32
+    W = 64
+    z = zcurve_tiles(n, n)
+    rm = np.stack([np.repeat(np.arange(n), n), np.tile(np.arange(n), n)], 1)
+
+    def max_window_spread(pts):
+        worst = 0
+        for i in range(0, len(pts) - W, W):
+            w = pts[i : i + W]
+            worst = max(worst, len(np.unique(w[:, 0])) + len(np.unique(w[:, 1])))
+        return worst
+
+    assert max_window_spread(z) < max_window_spread(rm)
+    assert max_window_spread(z) <= 2 * int(np.sqrt(W))  # 8+8 for a 64-block
+
+
+def test_morton_order_sorts_by_curve():
+    rng = np.random.default_rng(0)
+    r = rng.integers(0, 64, 100)
+    c = rng.integers(0, 64, 100)
+    order = morton_order(r, c)
+    keys = morton_encode(r[order], c[order])
+    assert np.all(np.diff(keys.astype(np.int64)) >= 0)

@@ -1,0 +1,58 @@
+"""Sharding rule resolution: divisibility fallback, conflict handling, and
+validity of every arch's param specs on a tiny mesh."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.train import sharding as shd
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single-device container: a 1x1 mesh exercises the full code path
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_resolve_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # every dim divides 1 -> all rules apply
+    spec = shd._resolve((16, 32), ("embed", "mlp"), shd.PARAM_RULES, mesh)
+    assert spec == P("data", "model")
+
+
+def test_resolve_conflict_first_dim_wins():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # expert and mlp both want "model": expert (first) wins, mlp drops
+    spec = shd._resolve((8, 16, 32), ("expert", "embed", "mlp"), shd.PARAM_RULES, mesh)
+    assert spec == P("model", "data", None)
+
+
+def test_resolve_indivisible_drops():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    spec = shd._resolve((4, 128), ("kv_heads", "head_dim"), shd.PARAM_RULES, FakeMesh())
+    assert spec == P(None, None)  # kv=4 cannot shard 16 ways
+    spec2 = shd._resolve((48, 128), ("heads", "head_dim"), shd.PARAM_RULES, FakeMesh())
+    assert spec2 == P("model", None)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_shardings_build_for_all_archs(arch, mesh):
+    spec = ARCHS[arch]
+    shapes = jax.eval_shape(lambda: spec.init(jax.random.PRNGKey(0))[0])
+    _, axes = spec.init(jax.random.PRNGKey(0), reduced=True)
+    shardings = shd.make_param_sharding(mesh, shapes, axes)
+    n = len(jax.tree.leaves(shardings))
+    assert n == len(jax.tree.leaves(shapes))
+
+
+def test_constrain_noop_without_mesh():
+    import jax.numpy as jnp
+
+    x = jnp.ones((4, 8))
+    assert shd.constrain(x, ("batch", "embed")) is x

@@ -1,0 +1,178 @@
+"""Substrate: optimizer, checkpointing, fault tolerance, compression,
+data pipeline determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import TokenPipelineConfig, token_batch
+from repro.optim.adam import AdamConfig, adam_update, init_adam, schedule
+from repro.optim.compress import compressed_psum, ef_state, quantize, dequantize
+from repro.train import checkpoint as ckpt
+from repro.train.fault import DataSkipper, Heartbeat, StragglerDetector, elastic_mesh_shapes
+
+
+def test_adam_converges_quadratic():
+    cfg = AdamConfig(lr=0.1, warmup_steps=1, total_steps=200, weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    state = init_adam(params)
+    for _ in range(200):
+        grads = jax.tree.map(lambda p: 2 * p, params)  # d/dp p^2
+        params, state, _ = adam_update(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_schedule_shape():
+    cfg = AdamConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(schedule(cfg, 0)) < 0.15
+    assert float(schedule(cfg, 10)) == pytest.approx(1.0, abs=1e-3)
+    assert float(schedule(cfg, 100)) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_clipping_applied():
+    cfg = AdamConfig(lr=0.1, clip_norm=1.0, warmup_steps=1, total_steps=10)
+    params = {"w": jnp.zeros(3)}
+    state = init_adam(params)
+    _, _, metrics = adam_update(cfg, params, {"w": jnp.array([100.0, 0, 0])}, state)
+    assert float(metrics["grad_norm"]) == pytest.approx(100.0)
+
+
+# -- checkpointing ----------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4))}}
+    ckpt.save(str(tmp_path), 7, tree, extra={"loss": 1.5})
+    steps = ckpt.list_steps(str(tmp_path))
+    assert steps == [7]
+    restored, extra = ckpt.restore(str(tmp_path), 7, tree)
+    assert extra["loss"] == 1.5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_latest_skips_incomplete(tmp_path):
+    tree = {"a": jnp.arange(4.0)}
+    ckpt.save(str(tmp_path), 1, tree)
+    ckpt.save(str(tmp_path), 2, tree)
+    # simulate a crash mid-write of step 3: no .complete marker
+    bad = tmp_path / "step_00000003"
+    bad.mkdir()
+    (bad / "manifest.json").write_text("{broken")
+    hit = ckpt.restore_latest(str(tmp_path), tree)
+    assert hit is not None and hit[0] == 2
+
+
+def test_checkpoint_prune(tmp_path):
+    tree = {"a": jnp.zeros(2)}
+    for s in range(5):
+        ckpt.save(str(tmp_path), s, tree)
+    ckpt.prune(str(tmp_path), keep=2)
+    assert ckpt.list_steps(str(tmp_path)) == [3, 4]
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(3)})
+    with pytest.raises(AssertionError):
+        ckpt.restore(str(tmp_path), 1, {"a": jnp.zeros(4)})
+
+
+# -- fault tolerance ---------------------------------------------------------
+
+
+def test_heartbeat_detects_dead():
+    hb = Heartbeat(timeout_s=10)
+    hb.beat(0, now=100.0)
+    hb.beat(1, now=105.0)
+    assert hb.dead_workers([0, 1], now=112.0) == [0]
+    assert hb.dead_workers([0, 1, 2], now=112.0) == [0, 2]
+
+
+def test_straggler_detector_flags_slow_worker():
+    det = StragglerDetector(k_sigma=3.0, patience=3)
+    flagged = False
+    for i in range(20):
+        flagged = det.observe(0, 1.0 + 0.01 * np.sin(i))
+    assert not flagged
+    for _ in range(3):
+        flagged = det.observe(0, 5.0)
+    assert flagged
+
+
+def test_elastic_mesh_shapes():
+    assert elastic_mesh_shapes(256, 16) == (16, 16)
+    assert elastic_mesh_shapes(240, 16) == (15, 16)  # lost a host: shrink data
+    assert elastic_mesh_shapes(512, 16) == (32, 16)
+
+
+def test_data_skipper_deterministic():
+    cfg = TokenPipelineConfig(vocab=101, seq_len=16, global_batch=4)
+    sk = DataSkipper(seed=0)
+    ids = [sk.next_batch_id() for _ in range(5)]
+    sk2 = DataSkipper(seed=0)
+    sk2.skip_to(3)
+    assert sk2.next_batch_id() == 3
+    b3a = token_batch(cfg, 3)
+    b3b = token_batch(cfg, 3)
+    np.testing.assert_array_equal(b3a["tokens"], b3b["tokens"])
+    assert not np.array_equal(token_batch(cfg, 3)["tokens"], token_batch(cfg, 4)["tokens"])
+
+
+# -- gradient compression -----------------------------------------------------
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000).astype(np.float32))
+    q, s = quantize(x)
+    err = jnp.abs(dequantize(q, s) - x).max()
+    assert float(err) <= float(s) * 0.5 + 1e-6
+
+
+def test_compressed_psum_error_feedback():
+    """Error feedback: accumulated compressed updates converge to the true
+    sum (residual is recycled, not lost)."""
+    from jax import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(1)
+    grads = {"w": jnp.asarray(rng.standard_normal(64).astype(np.float32))}
+    errors = ef_state(grads)
+
+    def step(g, e):
+        return compressed_psum(g, e, "pod")
+
+    fn = shard_map(step, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()))
+    total_true = np.zeros(64)
+    total_comp = np.zeros(64)
+    for i in range(30):
+        g = {"w": jnp.asarray(rng.standard_normal(64).astype(np.float32))}
+        mean, errors = fn(g, errors)
+        total_true += np.asarray(g["w"])
+        total_comp += np.asarray(mean["w"])
+    # single-step error is ~scale/2; accumulated error stays bounded by one
+    # quantization step (not 30x), proving the feedback works
+    resid = np.abs(total_true - total_comp).max()
+    assert resid < 0.1, resid
+
+
+def test_master_weights_adam_matches_f32_updates():
+    """bf16 params + f32 master track plain f32 Adam closely."""
+    cfg = AdamConfig(lr=0.05, warmup_steps=1, total_steps=50, weight_decay=0.0,
+                     clip_norm=100.0)
+    w0 = jnp.array([1.0, -2.0, 0.5])
+    p_f32 = {"w": w0}
+    s_f32 = init_adam(p_f32)
+    p_bf16 = {"w": w0.astype(jnp.bfloat16)}
+    s_mw = init_adam(p_bf16, master_weights=True)
+    for _ in range(50):
+        g = jax.tree.map(lambda p: 2 * p.astype(jnp.float32), p_f32)
+        p_f32, s_f32, _ = adam_update(cfg, p_f32, g, s_f32)
+        g2 = jax.tree.map(lambda p: 2 * p.astype(jnp.float32), p_bf16)
+        p_bf16, s_mw, _ = adam_update(cfg, p_bf16, g2, s_mw)
+    assert p_bf16["w"].dtype == jnp.bfloat16
+    err = float(jnp.abs(s_mw["master"]["w"] - p_f32["w"]).max())
+    assert err < 5e-2, err
