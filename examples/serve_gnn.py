@@ -1,0 +1,69 @@
+"""Graph serving end-to-end: the batched multi-graph SCV inference engine.
+
+A stream of requests over a small pool of hot graphs (the serving-scale
+regime: many users, few distinct graph topologies) is driven through
+``GraphServeEngine``.  Watch three effects:
+
+* the plan cache turns repeat graphs into hits (no §III-C preprocessing),
+* batching fuses many small graphs into one block-diagonal aggregation
+  launch per layer,
+* padding buckets keep the jit shape set small across waves.
+
+    PYTHONPATH=src python examples/serve_gnn.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.models.gnn import GNNConfig, build_graph, gnn_forward, init_gnn
+from repro.serve.graph_engine import (
+    GraphEngineConfig,
+    GraphRequest,
+    GraphServeEngine,
+)
+from repro.simul.datasets import gcn_normalize, powerlaw_graph
+
+rng = np.random.default_rng(0)
+D_IN, N_CLASSES = 32, 8
+
+# a pool of hot graphs (e.g. per-tenant subgraphs), reused across requests
+pool = [
+    gcn_normalize(powerlaw_graph(n, 4 * n, seed=i))
+    for i, n in enumerate([60, 90, 120, 150, 200, 250])
+]
+
+cfg = GNNConfig(name="gcn", kind="gcn", d_in=D_IN, d_hidden=64,
+                n_classes=N_CLASSES, backend="jnp")
+params, _ = init_gnn(jax.random.PRNGKey(0), cfg)
+engine = GraphServeEngine(
+    {"gcn": (params, cfg)},
+    GraphEngineConfig(max_batch_graphs=8, max_batch_nodes=2048, tile=64, cap=64),
+)
+
+n_requests = 48
+t0 = time.time()
+for rid in range(n_requests):
+    adj = pool[int(rng.integers(len(pool)))]
+    x = rng.standard_normal((adj.shape[0], D_IN)).astype(np.float32)
+    engine.submit(GraphRequest(rid=rid, adj=adj, x=x, model="gcn"))
+    if (rid + 1) % 16 == 0:  # a wave arrives; serve it
+        engine.run()
+elapsed = time.time() - t0
+
+m = engine.metrics()
+print(f"served {m['completed']} requests in {elapsed:.2f}s "
+      f"({m['completed'] / elapsed:.1f} graphs/s) "
+      f"using {m['launches']} batched launches")
+print(f"plan cache: {m['plan_cache_hits']} hits / {m['plan_cache_misses']} misses "
+      f"(hit rate {m['plan_cache_hit_rate']:.0%}), "
+      f"{m['plan_cache_bytes'] / 1024:.0f} KiB resident, "
+      f"{m['plan_build_seconds'] * 1e3:.1f} ms total spent building plans")
+
+# spot-check one request against the unbatched reference
+r = engine.completed[-1]
+ref = gnn_forward(params, cfg, build_graph(r.adj, tile=64, backend_cap=64),
+                  np.asarray(r.x))
+err = float(np.abs(np.asarray(ref) - r.out).max())
+print(f"batched output matches per-graph forward to {err:.2e}")
+print("OK")

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Fast CI tier: the whole suite minus the multi-minute `slow`-marked
+# modules — a seconds-scale default loop.  Pass extra pytest args through,
+# e.g. `scripts/ci.sh -k serve`.  The full tier-1 command (ROADMAP.md)
+# remains `PYTHONPATH=src python -m pytest -x -q`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q -m "not slow" "$@"

@@ -13,6 +13,7 @@ from repro.core.formats import (
     CSBMatrix,
     CSCMatrix,
     CSRMatrix,
+    block_diag_coo,
     coo_from_dense,
     coo_to_bcsr,
     coo_to_csb,

@@ -18,7 +18,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:  # older jax keeps it under experimental
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.partition import Partition, shard_tiles, split_equal_nnz

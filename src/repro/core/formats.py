@@ -11,7 +11,7 @@ the device-facing arrays are plain ndarrays convertible with jnp.asarray.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -64,6 +64,48 @@ def coo_from_dense(a: np.ndarray) -> COOMatrix:
     return COOMatrix(
         rows.astype(np.int32), cols.astype(np.int32), a[rows, cols], a.shape
     )
+
+
+def block_diag_coo(
+    mats: Sequence["COOMatrix"],
+    pad_shape: Optional[tuple[int, int]] = None,
+) -> tuple["COOMatrix", np.ndarray, np.ndarray]:
+    """Compose matrices into one block-diagonal COO.
+
+    The i-th input occupies rows ``row_off[i]:row_off[i+1]`` and columns
+    ``col_off[i]:col_off[i+1]`` of the composite; no cross-block entries
+    exist, so aggregation over the composite is exactly the per-matrix
+    aggregation stacked (the batching identity the serving engine relies
+    on).  ``pad_shape`` grows the composite to at least that shape with
+    structurally-empty trailing rows/cols (padding-bucket support).
+
+    Returns ``(composite, row_off, col_off)`` with offset arrays of length
+    ``len(mats) + 1``.
+    """
+    k = len(mats)
+    row_off = np.zeros(k + 1, np.int64)
+    col_off = np.zeros(k + 1, np.int64)
+    for i, a in enumerate(mats):
+        row_off[i + 1] = row_off[i] + a.shape[0]
+        col_off[i + 1] = col_off[i] + a.shape[1]
+    m, n = int(row_off[-1]), int(col_off[-1])
+    if pad_shape is not None:
+        if pad_shape[0] < m or pad_shape[1] < n:
+            raise ValueError(f"pad_shape {pad_shape} smaller than composite ({m}, {n})")
+        m, n = int(pad_shape[0]), int(pad_shape[1])
+    if k:
+        rows = np.concatenate(
+            [a.rows.astype(np.int64) + row_off[i] for i, a in enumerate(mats)]
+        ).astype(np.int32)
+        cols = np.concatenate(
+            [a.cols.astype(np.int64) + col_off[i] for i, a in enumerate(mats)]
+        ).astype(np.int32)
+        vals = np.concatenate([a.vals for a in mats])
+    else:
+        rows = np.zeros(0, np.int32)
+        cols = np.zeros(0, np.int32)
+        vals = np.zeros(0, np.float32)
+    return COOMatrix(rows, cols, vals, (m, n)), row_off, col_off
 
 
 # ---------------------------------------------------------------------------

@@ -70,7 +70,8 @@ def _kernel(
         out_ref[pl.ds(r, 1), :] += v * zrow
         return 0
 
-    jax.lax.fori_loop(0, nnz, body, 0, unroll=False)
+    # NB: `unroll` requires statically-known bounds; nnz is dynamic.
+    jax.lax.fori_loop(0, nnz, body, 0)
 
 
 @functools.partial(

@@ -12,9 +12,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     2-pod axis (512 chips) that carries only DP gradient traffic."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes)
 
 
 def make_mesh(n_chips: int, model_parallel: int = 16, n_pods: int = 1):
@@ -23,12 +21,6 @@ def make_mesh(n_chips: int, model_parallel: int = 16, n_pods: int = 1):
     data = max(1, per_pod // model_parallel)
     if n_pods > 1:
         return jax.make_mesh(
-            (n_pods, data, model_parallel),
-            ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+            (n_pods, data, model_parallel), ("pod", "data", "model")
         )
-    return jax.make_mesh(
-        (data, model_parallel),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return jax.make_mesh((data, model_parallel), ("data", "model"))

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregate import aggregate_scv_tiles, scv_device_arrays
-from repro.core.formats import COOMatrix
+from repro.core.formats import COOMatrix, block_diag_coo
 from repro.core.scv import SCVTiles, coo_to_scv_tiles
 from repro.models.layers import make_param, split_tree
 
@@ -173,6 +173,97 @@ def gnn_forward(params, cfg: GNNConfig, g: Graph, x):
         if i + 1 < cfg.n_layers:
             h = jax.nn.relu(h)
     return h
+
+
+# ---------------------------------------------------------------------------
+# batched multi-graph forward (serving path)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BatchedGraph:
+    """Many small graphs composed into one block-diagonal ``Graph``.
+
+    Because the composite adjacency is block-diagonal, one aggregation
+    launch over it equals the per-graph aggregations stacked.  Request i
+    owns node rows ``node_offsets[i] : node_offsets[i] + node_counts[i]``;
+    every other composite row is structural padding (members may sit at
+    tile-aligned offsets, and the composite is grown to a padding bucket so
+    jit sees few distinct shapes).  ``n_real_nodes`` is the total real node
+    count across members — NOT a row boundary; always use the offset/count
+    arrays to locate real rows.
+    """
+
+    graph: Graph
+    node_offsets: np.ndarray  # int64[k+1] — request i starts at composite row off[i]
+    node_counts: np.ndarray  # int64[k] — request i owns off[i] : off[i]+counts[i]
+    n_real_nodes: int
+
+    @property
+    def n_graphs(self) -> int:
+        return len(self.node_counts)
+
+
+def build_batched_graph(
+    adjs: list[COOMatrix],
+    tile: int = 64,
+    backend_cap: Optional[int] = None,
+    pad_nodes: Optional[int] = None,
+) -> BatchedGraph:
+    """Compose per-request adjacencies into one device-ready Graph."""
+    for a in adjs:
+        if a.shape[0] != a.shape[1]:
+            raise ValueError(f"adjacency must be square, got {a.shape}")
+    n_real = int(sum(a.shape[0] for a in adjs))
+    pad_shape = None
+    if pad_nodes is not None:
+        if pad_nodes < n_real:
+            raise ValueError(f"pad_nodes={pad_nodes} < total nodes {n_real}")
+        pad_shape = (pad_nodes, pad_nodes)
+    comp, row_off, _ = block_diag_coo(adjs, pad_shape=pad_shape)
+    g = build_graph(comp, tile=tile, backend_cap=backend_cap)
+    return BatchedGraph(
+        graph=g,
+        node_offsets=row_off,
+        node_counts=np.diff(row_off),
+        n_real_nodes=n_real,
+    )
+
+
+def batch_features(bg: BatchedGraph, xs: list) -> jnp.ndarray:
+    """Stack per-request feature matrices into the composite node space
+    (zeros in padding rows)."""
+    if len(xs) != bg.n_graphs:
+        raise ValueError(f"{len(xs)} feature blocks for {bg.n_graphs} graphs")
+    d = int(np.asarray(xs[0]).shape[1]) if xs else 0
+    x = np.zeros((bg.graph.n_nodes, d), np.float32)
+    for i, xi in enumerate(xs):
+        s = int(bg.node_offsets[i])
+        x[s : s + int(bg.node_counts[i])] = np.asarray(xi, np.float32)
+    return jnp.asarray(x)
+
+
+def split_outputs(bg: BatchedGraph, out: jnp.ndarray) -> list[np.ndarray]:
+    """Scatter the composite output back into per-request blocks.
+
+    Blocks are copies, not views: a view would pin the whole bucket-sized
+    composite alive for as long as any request retains its (much smaller)
+    output."""
+    host = np.asarray(out)
+    return [
+        host[
+            int(bg.node_offsets[i]) : int(bg.node_offsets[i]) + int(bg.node_counts[i])
+        ].copy()
+        for i in range(bg.n_graphs)
+    ]
+
+
+def gnn_forward_batched(params, cfg: GNNConfig, bg: BatchedGraph, xs: list):
+    """One forward over the block-diagonal composite; returns the
+    per-request outputs (exactly ``gnn_forward`` on each graph, up to
+    float-add reassociation across tile boundaries)."""
+    out = gnn_forward(params, cfg, bg.graph, batch_features(bg, xs))
+    return split_outputs(bg, out)
 
 
 def gnn_loss(params, cfg: GNNConfig, g: Graph, x, labels, mask):

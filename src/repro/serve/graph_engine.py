@@ -1,0 +1,464 @@
+"""Batched multi-graph SCV inference engine.
+
+The GNN analogue of ``serve/engine.py``'s LM loop: requests carry a whole
+graph (adjacency + node features + model kind) instead of a prompt, and a
+"batch" is many small graphs fused into one block-diagonal adjacency so the
+entire wave runs as **one** SCV aggregation launch per layer.
+
+Three mechanisms make this a serving system rather than a loop:
+
+1. **Plan cache** (``plan_cache.py``) — the §III-C host-side SCV build is
+   content-addressed and LRU-cached at two levels: per-graph ``Graph``
+   bundles (hot graphs skip preprocessing) and assembled composite batches
+   (hot *batches* skip even the concatenation).
+
+2. **Composite assembly from cached plans** — because every member plan is
+   padded to the tile grid, a batch plan is pure index arithmetic: member
+   tile coordinates are shifted by the member's block offset and the tile
+   arrays concatenated.  No re-tiling, no re-sorting, no COO scan.  The
+   block-diagonal structure guarantees the result equals per-graph
+   aggregation stacked (``core.formats.block_diag_coo`` is the reference
+   construction; ``tests/test_serve_graph.py`` checks both agree).
+
+3. **Padding buckets** — composite node counts are rounded up to a fixed
+   bucket ladder, so XLA sees a handful of distinct shapes instead of one
+   per batch and jit recompilation is bounded.
+
+The engine is synchronous and single-host (like ``ServeEngine``); the
+launch/ layer owns meshes and process fan-out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import COOMatrix
+from repro.core.scv import SCVTiles
+from repro.models.gnn import (
+    BatchedGraph,
+    GNNConfig,
+    Graph,
+    build_graph,
+    gnn_forward_batched,
+)
+from repro.serve.plan_cache import PlanCache, combine_keys, coo_content_key
+
+
+@dataclasses.dataclass
+class GraphRequest:
+    """One inference request: run ``model`` over (adj, x)."""
+
+    rid: int
+    adj: COOMatrix  # normalized adjacency (e.g. gcn_normalize output)
+    x: np.ndarray  # f32[n_nodes, d_in]
+    model: str = "default"
+    out: Optional[np.ndarray] = None  # f32[n_nodes, n_classes] when done
+    done: bool = False
+    error: Optional[str] = None  # set when the request is ejected as failed
+    retries: int = 0  # failed waves this request has been part of
+    isolate: bool = False  # re-serve alone (failure isolation)
+
+
+@dataclasses.dataclass
+class GraphEngineConfig:
+    max_batch_graphs: int = 16
+    max_batch_nodes: int = 4096
+    tile: int = 64
+    cap: int = 64  # fixed per-tile entry capacity (static shapes across plans)
+    node_buckets: tuple[int, ...] = (256, 512, 1024, 2048, 4096)
+    cache_entries: int = 256
+    cache_bytes: int = 256 << 20
+    completed_history: int = 1024  # recent requests kept for inspection
+    max_retries: int = 1  # failed waves a request survives before ejection
+
+    def __post_init__(self):
+        for field in ("max_batch_graphs", "max_batch_nodes", "tile", "cap"):
+            if getattr(self, field) <= 0:
+                raise ValueError(f"{field} must be positive")
+        if self.completed_history < 0:
+            raise ValueError("completed_history must be >= 0")
+        if self.node_buckets and self.max_batch_nodes > max(self.node_buckets):
+            # batches admitted past the ladder would each get a bespoke pad
+            # size — unbounded jit recompiles, the thing buckets exist to stop
+            raise ValueError(
+                f"max_batch_nodes={self.max_batch_nodes} exceeds the largest "
+                f"node bucket ({max(self.node_buckets)}); extend node_buckets "
+                f"(or set node_buckets=() for power-of-two padding)"
+            )
+
+
+# ---------------------------------------------------------------------------
+# composite assembly from per-graph plans
+# ---------------------------------------------------------------------------
+def _bucket_nodes(n: int, buckets: tuple[int, ...], tile: int) -> int:
+    """Smallest bucket >= n; past the ladder (an oversized single request —
+    _next_batch always admits the head), round up to the next power of two
+    so distinct jit shapes stay logarithmic in graph size rather than one
+    per request."""
+    for b in sorted(buckets):
+        if b >= n:
+            return -(-b // tile) * tile
+    p = 1
+    while p < n:
+        p *= 2
+    return -(-p // tile) * tile
+
+
+def _empty_tile_arrays(cap: int) -> dict:
+    return {
+        "tile_row": np.zeros(0, np.int32),
+        "tile_col": np.zeros(0, np.int32),
+        "rows": np.zeros((0, cap), np.int32),
+        "cols": np.zeros((0, cap), np.int32),
+        "vals": np.zeros((0, cap), np.float32),
+        "nnz_in_tile": np.zeros(0, np.int32),
+    }
+
+
+def _pad_tile_arrays(
+    arrays: dict, row_fill: np.ndarray, col_fill: Optional[np.ndarray], cap: int
+) -> dict:
+    """Append zero-nnz tiles at the given (row, col) coordinates."""
+    n_pad = int(row_fill.shape[0])
+    if n_pad == 0:
+        return arrays
+    if col_fill is None:
+        col_fill = np.zeros(n_pad, np.int32)
+    return {
+        "tile_row": np.concatenate([arrays["tile_row"], row_fill.astype(np.int32)]),
+        "tile_col": np.concatenate([arrays["tile_col"], col_fill.astype(np.int32)]),
+        "rows": np.concatenate([arrays["rows"], np.zeros((n_pad, cap), np.int32)]),
+        "cols": np.concatenate([arrays["cols"], np.zeros((n_pad, cap), np.int32)]),
+        "vals": np.concatenate([arrays["vals"], np.zeros((n_pad, cap), np.float32)]),
+        "nnz_in_tile": np.concatenate(
+            [arrays["nnz_in_tile"], np.zeros(n_pad, np.int32)]
+        ),
+    }
+
+
+def assemble_batched_graph(
+    plans: list[Graph], tile: int, pad_nodes: int
+) -> BatchedGraph:
+    """Fuse prepared per-graph plans into one block-diagonal plan.
+
+    Each member plan already tiles its (tile-padded) own grid, so the
+    composite is index arithmetic: member i's tile coordinates shift by
+    ``starts[i] // tile`` and its COO rows/cols by ``starts[i]``.  Member
+    coverage dummies stay valid (each composite block-row belongs to
+    exactly one member, so PS block-row contiguity is preserved), and the
+    bucket-padding rows at the tail get fresh zero-nnz coverage tiles so
+    the Pallas kernel defines the whole output.
+    """
+    T = tile
+    k = len(plans)
+    caps = {g.tiles.cap for g in plans}
+    if len(caps) > 1:
+        raise ValueError(f"member plans disagree on cap: {sorted(caps)}")
+    orders = {g.tiles.order for g in plans}
+    if len(orders) > 1:
+        raise ValueError(f"member plans disagree on order: {sorted(orders)}")
+    cap = caps.pop() if caps else 8
+
+    starts = np.zeros(k + 1, np.int64)
+    for i, g in enumerate(plans):
+        if g.tiles.tile != T:
+            raise ValueError(f"member plan tiled at {g.tiles.tile}, engine at {T}")
+        starts[i + 1] = starts[i] + -(-g.n_nodes // T) * T
+    n_aligned = int(starts[-1])
+    pad_nodes = -(-max(pad_nodes, n_aligned) // T) * T
+    blk_off = starts // T
+
+    # --- composite COO (device edge arrays, used by GAT attention) ---
+    rows = np.concatenate(
+        [np.asarray(g.rows, np.int64) + starts[i] for i, g in enumerate(plans)]
+    ).astype(np.int32) if k else np.zeros(0, np.int32)
+    cols = np.concatenate(
+        [np.asarray(g.cols, np.int64) + starts[i] for i, g in enumerate(plans)]
+    ).astype(np.int32) if k else np.zeros(0, np.int32)
+    vals = np.concatenate(
+        [np.asarray(g.vals) for g in plans]
+    ) if k else np.zeros(0, np.float32)
+
+    # --- composite device tile arrays (coverage dummies included) ---
+    arrays = _empty_tile_arrays(cap)
+    if k:
+        for key in arrays:
+            parts = []
+            for i, g in enumerate(plans):
+                a = np.asarray(g.tile_arrays[key])
+                if key in ("tile_row", "tile_col"):
+                    a = (a.astype(np.int64) + blk_off[i]).astype(np.int32)
+                parts.append(a)
+            arrays[key] = np.concatenate(parts)
+
+    # fresh coverage for the bucket-padding block-rows at the tail: the
+    # Pallas kernel zero-defines a PS strip only when it visits its row
+    arrays = _pad_tile_arrays(
+        arrays,
+        row_fill=np.arange(n_aligned // T, pad_nodes // T, dtype=np.int32),
+        col_fill=None,
+        cap=cap,
+    )
+
+    # --- tile-count bucket: pad nt to the next power of two so jit sees a
+    # bounded set of array shapes across batch compositions.  Padding tiles
+    # carry nnz == 0 and repeat the *last* tile's coordinates: the Pallas
+    # kernel then revisits an already-initialized PS strip (no re-zeroing —
+    # appending a fresh block-row here would wipe real output), and the jnp
+    # reference masks them via nnz_in_tile.
+    nt = int(arrays["tile_row"].shape[0])
+    nt_bucket = 8
+    while nt_bucket < nt:
+        nt_bucket *= 2
+    if nt:
+        padn = nt_bucket - nt
+        arrays = _pad_tile_arrays(
+            arrays,
+            row_fill=np.full(padn, arrays["tile_row"][-1], np.int32),
+            col_fill=np.full(padn, arrays["tile_col"][-1], np.int32),
+            cap=cap,
+        )
+
+    # --- composite perm (edge -> tile-slot map, for GAT re-weighting) ---
+    entry_off = np.zeros(k + 1, np.int64)
+    for i, g in enumerate(plans):
+        entry_off[i + 1] = entry_off[i] + int(np.asarray(g.rows).shape[0])
+    perm_parts = []
+    for i, g in enumerate(plans):
+        p = np.asarray(g.perm)
+        perm_parts.append(np.where(p >= 0, p + entry_off[i], -1))
+    nt_cov = arrays["tile_row"].shape[0]
+    perm = np.full((nt_cov, cap), -1, np.int64)
+    if perm_parts:
+        stacked = np.concatenate(perm_parts)
+        perm[: stacked.shape[0]] = stacked
+
+    # --- composite SCVTiles: METADATA ONLY (tile / cap / shape / order).
+    # The forward path always routes through Graph.tile_arrays (_agg passes
+    # arrays=), so duplicating the entry arrays here would only double
+    # assembly cost and the bytes charged against the cache budget.
+    meta = _empty_tile_arrays(cap)
+    tiles = SCVTiles(
+        tile_row=meta["tile_row"],
+        tile_col=meta["tile_col"],
+        rows=meta["rows"],
+        cols=meta["cols"],
+        vals=meta["vals"],
+        nnz_in_tile=meta["nnz_in_tile"],
+        tile=T,
+        cap=cap,
+        shape=(pad_nodes, pad_nodes),
+        order=orders.pop() if orders else "zmorton",
+        perm=None,
+    )
+
+    graph = Graph(
+        n_nodes=pad_nodes,
+        rows=jnp.asarray(rows),
+        cols=jnp.asarray(cols),
+        vals=jnp.asarray(vals),
+        tiles=tiles,
+        tile_arrays={kk: jnp.asarray(v) for kk, v in arrays.items()},
+        perm=jnp.asarray(perm),
+    )
+    return BatchedGraph(
+        graph=graph,
+        node_offsets=starts,
+        node_counts=np.array([g.n_nodes for g in plans], np.int64),
+        n_real_nodes=int(sum(g.n_nodes for g in plans)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+class GraphServeEngine:
+    """Drives GNN models over batches of graph requests.
+
+    ``models`` maps a model name to ``(params, GNNConfig)``; requests pick
+    a model by name and are batched per model kind (mixed kinds cannot
+    share a forward).
+    """
+
+    def __init__(
+        self,
+        models: dict[str, tuple],
+        cfg: Optional[GraphEngineConfig] = None,
+    ):
+        self.models = models
+        self.cfg = cfg = cfg if cfg is not None else GraphEngineConfig()
+        self.plan_cache = PlanCache(
+            max_entries=cfg.cache_entries, max_bytes=cfg.cache_bytes
+        )
+        self.queue: list[GraphRequest] = []
+        # bounded: a serving process runs forever; retaining every request
+        # (adjacency + features + outputs) would grow without limit
+        self.completed: deque[GraphRequest] = deque(maxlen=cfg.completed_history)
+        self.failed: deque[GraphRequest] = deque(maxlen=cfg.completed_history)
+        self.n_completed = 0
+        self.n_failed = 0
+        self.last_completed: list[GraphRequest] = []  # from the latest run()
+        self.n_batches = 0  # == forward launches (one per batch)
+        self.serve_seconds = 0.0
+
+    def submit(self, req: GraphRequest) -> None:
+        if req.model not in self.models:
+            raise KeyError(f"unknown model {req.model!r}; have {list(self.models)}")
+        if req.adj.shape[0] != req.adj.shape[1]:
+            raise ValueError(f"adjacency must be square, got {req.adj.shape}")
+        if req.x.shape[0] != req.adj.shape[0]:
+            raise ValueError(
+                f"features rows {req.x.shape[0]} != nodes {req.adj.shape[0]}"
+            )
+        # reject malformed width here: inside run() it would crash mid-wave
+        # and take the co-batched requests down with it
+        _, mcfg = self.models[req.model]
+        if req.x.ndim != 2 or req.x.shape[1] != mcfg.d_in:
+            raise ValueError(
+                f"features shape {req.x.shape} incompatible with model "
+                f"{req.model!r} (d_in={mcfg.d_in})"
+            )
+        # out-of-range indices would shift into a NEIGHBOR's block of the
+        # composite and silently corrupt co-batched outputs
+        n = req.adj.shape[0]
+        if req.adj.nnz and not (
+            0 <= int(req.adj.rows.min())
+            and int(req.adj.rows.max()) < n
+            and 0 <= int(req.adj.cols.min())
+            and int(req.adj.cols.max()) < n
+        ):
+            raise ValueError(f"adjacency indices out of range for shape {req.adj.shape}")
+        self.queue.append(req)
+
+    # -- batching ----------------------------------------------------------
+    def _next_batch(self) -> list[GraphRequest]:
+        """Greedy in-arrival-order pack: same model kind, bounded graph and
+        node counts.  Always admits at least one request.
+
+        The node budget counts each member's *tile-aligned* footprint — the
+        size it actually occupies in the composite — so the total stays
+        within the bucket ladder and never falls through to per-batch jit
+        shapes."""
+        T = self.cfg.tile
+        head = self.queue[0]
+        if head.isolate:  # failure isolation: re-serve a failed request alone
+            self.queue = self.queue[1:]
+            return [head]
+        batch, nodes = [], 0
+        remaining = []
+        for r in self.queue:
+            fits = (
+                not r.isolate
+                and r.model == head.model
+                and len(batch) < self.cfg.max_batch_graphs
+            )
+            if fits:
+                aligned = -(-r.adj.shape[0] // T) * T
+                fits = not batch or nodes + aligned <= self.cfg.max_batch_nodes
+            if fits:
+                batch.append(r)
+                nodes += aligned
+            else:
+                remaining.append(r)
+        self.queue = remaining
+        return batch
+
+    # -- plans -------------------------------------------------------------
+    def _batch_plan(self, batch: list[GraphRequest]) -> BatchedGraph:
+        """Composite plan for a batch.  The composite key is derived from
+        content hashes alone, so a hot batch is resolved before any member
+        plan is touched — member plans are fetched/built only on a
+        composite miss (inside the builder)."""
+        T, cap = self.cfg.tile, self.cfg.cap
+        member_keys = [coo_content_key(r.adj, tile=T, cap=cap) for r in batch]
+        aligned = sum(-(-r.adj.shape[0] // T) * T for r in batch)
+        bucket = _bucket_nodes(aligned, self.cfg.node_buckets, T)
+        ckey = combine_keys(member_keys, salt=f"batch;bucket={bucket};tile={T};")
+
+        def build() -> BatchedGraph:
+            plans = [
+                self.plan_cache.get_or_build(
+                    k, lambda r=r: build_graph(r.adj, tile=T, backend_cap=cap)
+                )
+                for k, r in zip(member_keys, batch)
+            ]
+            return assemble_batched_graph(plans, T, bucket)
+
+        return self.plan_cache.get_or_build(ckey, build)
+
+    # -- serving -----------------------------------------------------------
+    def run(self) -> list[GraphRequest]:
+        """Serve every queued request; returns the newly completed ones.
+
+        A wave that raises re-raises out of run() with its requests either
+        requeued (isolated, up to ``max_retries``) or ejected to
+        ``self.failed`` — a caller that catches the error and calls run()
+        again always makes progress and eventually drains the queue.
+        Requests completed before the failing wave are in
+        ``self.last_completed`` (and ``self.completed``).  Interrupts
+        (BaseExceptions that are not Exceptions, e.g. KeyboardInterrupt)
+        restore the wave untouched: they are not request failures and
+        consume no retries."""
+        t0 = time.perf_counter()
+        done = self.last_completed = []
+        while self.queue:
+            batch = self._next_batch()
+            try:
+                bg = self._batch_plan(batch)
+                params, mcfg = self.models[batch[0].model]
+                outs = gnn_forward_batched(params, mcfg, bg, [r.x for r in batch])
+            except BaseException as e:
+                if not isinstance(e, Exception):
+                    self.queue = batch + self.queue
+                    self.serve_seconds += time.perf_counter() - t0
+                    raise
+                # A failed wave must not lose its requests — but blind
+                # requeueing would wedge the engine on a poison request.
+                # Surviving members go back isolated (served alone next
+                # run, so one bad member cannot keep failing a whole
+                # wave); a request that exhausts max_retries is ejected
+                # to ``failed`` with the error recorded.
+                survivors = []
+                for r in batch:
+                    r.retries += 1
+                    if r.retries > self.cfg.max_retries:
+                        r.error = f"{type(e).__name__}: {e}"
+                        self.failed.append(r)
+                        self.n_failed += 1
+                    else:
+                        r.isolate = True
+                        survivors.append(r)
+                self.queue = survivors + self.queue
+                self.serve_seconds += time.perf_counter() - t0
+                raise
+            self.n_batches += 1
+            for r, o in zip(batch, outs):
+                r.out = o
+                r.done = True
+                self.completed.append(r)
+                self.n_completed += 1
+                done.append(r)
+        self.serve_seconds += time.perf_counter() - t0
+        return done
+
+    def metrics(self) -> dict:
+        s = self.plan_cache.stats
+        return {
+            "batches": self.n_batches,
+            "launches": self.n_batches,  # one forward launch per batch
+            "completed": self.n_completed,
+            "failed": self.n_failed,
+            "serve_seconds": self.serve_seconds,
+            "plan_cache_hits": s.hits,
+            "plan_cache_misses": s.misses,
+            "plan_cache_evictions": s.evictions,
+            "plan_cache_bytes": s.bytes_in_use,
+            "plan_cache_entries": s.entries,
+            "plan_cache_hit_rate": s.hit_rate,
+            "plan_build_seconds": s.build_seconds,
+        }

@@ -1,0 +1,236 @@
+"""Plan cache: amortize SCV preprocessing across repeated graph queries.
+
+The paper builds SCV host-side ("statically generated from the COO format",
+§III-C) — a per-graph cost the serving path would otherwise repay on every
+request.  This module caches the prepared plan (the ``Graph`` bundle from
+``models/gnn.py``: SCV tiles + device arrays + permutation) keyed by a
+content hash of the COO adjacency, so hot graphs skip preprocessing
+entirely.
+
+Design:
+
+* **Content-hash keys** — ``coo_content_key`` hashes the raw (rows, cols,
+  vals, shape) bytes plus the plan parameters (tile, cap), so two requests
+  carrying the same adjacency — even built independently — share one plan,
+  and plans built under different tilings never collide.  Composite
+  (batched) plans derive their key from the member digests via
+  ``combine_keys``: the *composed* arrays are never re-hashed (member
+  adjacencies are still hashed once per wave to identify them).
+
+* **LRU + byte budget** — entries are evicted least-recently-used when
+  either the entry-count or the byte budget is exceeded.  Bytes are
+  accounted from the device/host arrays actually held by the plan.
+
+* **Counters** — hits / misses / evictions / bytes for the serving metrics
+  endpoint and the benchmark's hit-rate report.
+
+The cache is deliberately value-agnostic: ``get_or_build`` takes a builder
+callback, so the engine caches single-graph plans and composite batch
+plans (and, later, partitioned multi-device plans) through one code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Iterable, Optional
+
+import numpy as np
+
+from repro.core.formats import COOMatrix
+
+
+# ---------------------------------------------------------------------------
+# content keys
+# ---------------------------------------------------------------------------
+def coo_content_key(adj: COOMatrix, *, tile: int, cap: Optional[int] = None) -> str:
+    """Stable content hash of a COO adjacency + plan parameters."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(f"shape={adj.shape};tile={tile};cap={cap};".encode())
+    for a in (adj.rows, adj.cols, adj.vals):
+        arr = np.ascontiguousarray(a)
+        # frame each array with dtype + length: raw bytes alone would let
+        # byte-aliased arrays of different dtypes/lengths collide
+        h.update(f"{arr.dtype.str}:{arr.shape[0]};".encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def combine_keys(keys: Iterable[str], *, salt: str = "") -> str:
+    """Key for a composite plan derived from already-keyed members.
+
+    Hashing the member digests (plus a salt carrying batch parameters such
+    as the padding bucket) is orders of magnitude cheaper than re-hashing
+    the composed arrays, and equal batches — same members, same order,
+    same bucket — collapse to one plan.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(salt.encode())
+    for k in keys:
+        h.update(k.encode())
+    return h.hexdigest()
+
+
+def plan_nbytes(plan: Any) -> int:
+    """Best-effort byte footprint of a cached plan.
+
+    Walks the object for numpy / jax arrays (dataclass fields, dicts,
+    tuples/lists) and sums ``nbytes``.  Shared arrays are counted once
+    (identity-deduped).
+    """
+    seen: set[int] = set()
+    total = 0
+
+    def visit(obj):
+        nonlocal total
+        if obj is None or isinstance(obj, (int, float, str, bool, bytes)):
+            return
+        oid = id(obj)
+        if oid in seen:
+            return
+        seen.add(oid)
+        nb = getattr(obj, "nbytes", None)
+        if nb is not None and isinstance(nb, (int, np.integer)):
+            total += int(nb)
+            return
+        if isinstance(obj, dict):
+            for v in obj.values():
+                visit(v)
+        elif isinstance(obj, (list, tuple)):
+            for v in obj:
+                visit(v)
+        elif dataclasses.is_dataclass(obj):
+            for f in dataclasses.fields(obj):
+                visit(getattr(obj, f.name))
+
+    visit(plan)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# the cache
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PlanCacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_in_use: int = 0
+    entries: int = 0
+    build_seconds: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+
+@dataclasses.dataclass
+class _Entry:
+    value: Any
+    nbytes: int
+
+
+class PlanCache:
+    """Content-addressed LRU cache of prepared aggregation plans."""
+
+    def __init__(
+        self,
+        max_entries: int = 256,
+        max_bytes: int = 512 * 1024 * 1024,
+    ):
+        if max_entries <= 0:
+            raise ValueError("max_entries must be positive")
+        if max_bytes <= 0:
+            raise ValueError("max_bytes must be positive")
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+        self._entries: OrderedDict[str, _Entry] = OrderedDict()
+        self.stats = PlanCacheStats()
+        self._build_depth = 0  # nested get_or_build (composite -> members)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    @property
+    def keys(self) -> list[str]:
+        """Keys in LRU order (least-recently-used first)."""
+        return list(self._entries)
+
+    def get(self, key: str) -> Optional[Any]:
+        """Look up a plan; counts a hit/miss and refreshes recency."""
+        e = self._entries.get(key)
+        if e is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return e.value
+
+    def peek(self, key: str) -> Optional[Any]:
+        """Look up without touching recency or counters (introspection)."""
+        e = self._entries.get(key)
+        return e.value if e is not None else None
+
+    def put(self, key: str, value: Any, nbytes: Optional[int] = None) -> None:
+        if nbytes is None:
+            nbytes = plan_nbytes(value)
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.stats.bytes_in_use -= old.nbytes
+        if nbytes > self.max_bytes:
+            # an entry that can never fit would evict the whole cache on its
+            # way in and then be evicted itself — skip it instead
+            self.stats.entries = len(self._entries)
+            return
+        self._entries[key] = _Entry(value, int(nbytes))
+        self.stats.bytes_in_use += int(nbytes)
+        self._evict()
+        self.stats.entries = len(self._entries)
+
+    def get_or_build(
+        self,
+        key: str,
+        builder: Callable[[], Any],
+        nbytes: Optional[int] = None,
+    ) -> Any:
+        """Return the cached plan for ``key``, building (and caching) it on
+        a miss.  Oversized plans (> max_bytes on their own) are still
+        returned but not retained."""
+        value = self.get(key)
+        if value is not None:
+            return value
+        # build_seconds accumulates only at the outermost nesting level:
+        # a composite builder calls get_or_build for its members, and the
+        # outer elapsed time already contains theirs
+        self._build_depth += 1
+        t0 = time.perf_counter()
+        try:
+            value = builder()
+        finally:
+            dt = time.perf_counter() - t0
+            self._build_depth -= 1
+            if self._build_depth == 0:
+                self.stats.build_seconds += dt
+        nb = plan_nbytes(value) if nbytes is None else int(nbytes)
+        if nb <= self.max_bytes:
+            self.put(key, value, nb)
+        return value
+
+    def _evict(self) -> None:
+        while self._entries and (
+            len(self._entries) > self.max_entries
+            or self.stats.bytes_in_use > self.max_bytes
+        ):
+            _, e = self._entries.popitem(last=False)
+            self.stats.bytes_in_use -= e.nbytes
+            self.stats.evictions += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.stats.bytes_in_use = 0
+        self.stats.entries = 0

@@ -8,6 +8,8 @@ import pytest
 from repro.configs import ARCHS
 from repro.optim.adam import AdamConfig, init_adam
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_reduced_train_step(arch):

@@ -18,7 +18,7 @@ from repro.simul.datasets import gcn_normalize, powerlaw_graph
 adj = gcn_normalize(powerlaw_graph(800, 4000, seed=0))
 tiles = coo_to_scv_tiles(adj, 32)
 g = distribute_tiles(tiles, 8)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",))
 z = jnp.asarray(np.random.default_rng(0).standard_normal(
     (adj.shape[1], 16)).astype(np.float32))
 out = np.asarray(aggregate_distributed(g, z, mesh))

@@ -4,10 +4,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import ARCHS
 from repro.models import layers as L
 from repro.models.transformer import decode_step, hidden_states, init_cache, prefill
+
+pytestmark = pytest.mark.slow
 
 
 def _setup(kv_quant):

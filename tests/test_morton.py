@@ -1,4 +1,7 @@
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.morton import morton_decode, morton_encode, morton_order, zcurve_tiles

@@ -1,0 +1,160 @@
+"""Plan cache semantics: content keys, hit/miss/eviction, byte budget."""
+import numpy as np
+import pytest
+
+from repro.core.formats import COOMatrix
+from repro.serve.plan_cache import (
+    PlanCache,
+    combine_keys,
+    coo_content_key,
+    plan_nbytes,
+)
+
+
+def _coo(seed=0, n=32, nnz=64):
+    rng = np.random.default_rng(seed)
+    return COOMatrix(
+        rng.integers(0, n, nnz).astype(np.int32),
+        rng.integers(0, n, nnz).astype(np.int32),
+        rng.standard_normal(nnz).astype(np.float32),
+        (n, n),
+    )
+
+
+# ---------------------------------------------------------------------------
+# content keys
+# ---------------------------------------------------------------------------
+def test_content_key_is_content_addressed():
+    a = _coo(0)
+    b = COOMatrix(a.rows.copy(), a.cols.copy(), a.vals.copy(), a.shape)
+    assert coo_content_key(a, tile=64) == coo_content_key(b, tile=64)
+
+
+def test_content_key_separates_content_and_params():
+    a, b = _coo(0), _coo(1)
+    assert coo_content_key(a, tile=64) != coo_content_key(b, tile=64)
+    assert coo_content_key(a, tile=64) != coo_content_key(a, tile=128)
+    assert coo_content_key(a, tile=64, cap=32) != coo_content_key(a, tile=64, cap=64)
+
+
+def test_content_key_framed_against_byte_aliasing():
+    # int64 [5] and int32 [5, 0] share a byte representation; without
+    # dtype/length framing these two DIFFERENT graphs would collide
+    a = COOMatrix(
+        np.array([5], np.int64),
+        np.array([2], np.int64),
+        np.array([1.0], np.float64),
+        (8, 8),
+    )
+    b = COOMatrix(
+        np.frombuffer(a.rows.tobytes(), np.int32).copy(),
+        np.frombuffer(a.cols.tobytes(), np.int32).copy(),
+        np.frombuffer(a.vals.tobytes(), np.float32).copy(),
+        (8, 8),
+    )
+    assert coo_content_key(a, tile=64) != coo_content_key(b, tile=64)
+
+
+def test_combine_keys_order_and_salt_sensitive():
+    k1, k2 = coo_content_key(_coo(0), tile=64), coo_content_key(_coo(1), tile=64)
+    assert combine_keys([k1, k2]) == combine_keys([k1, k2])
+    assert combine_keys([k1, k2]) != combine_keys([k2, k1])
+    assert combine_keys([k1, k2], salt="bucket=256") != combine_keys(
+        [k1, k2], salt="bucket=512"
+    )
+
+
+# ---------------------------------------------------------------------------
+# hit / miss / LRU / eviction
+# ---------------------------------------------------------------------------
+def test_hit_miss_counters():
+    c = PlanCache(max_entries=4)
+    assert c.get("k") is None
+    c.put("k", "plan", nbytes=10)
+    assert c.get("k") == "plan"
+    assert (c.stats.hits, c.stats.misses) == (1, 1)
+    assert c.stats.hit_rate == 0.5
+
+
+def test_lru_eviction_order():
+    c = PlanCache(max_entries=2)
+    c.put("a", 1, nbytes=1)
+    c.put("b", 2, nbytes=1)
+    assert c.get("a") == 1  # refresh a; b is now LRU
+    c.put("c", 3, nbytes=1)  # evicts b
+    assert c.keys == ["a", "c"]
+    assert c.stats.evictions == 1
+    assert c.get("b") is None
+
+
+def test_byte_budget_eviction():
+    c = PlanCache(max_entries=100, max_bytes=100)
+    c.put("a", 1, nbytes=60)
+    c.put("b", 2, nbytes=60)  # 120 > 100 -> evict a
+    assert "a" not in c and "b" in c
+    assert c.stats.bytes_in_use == 60
+    assert c.stats.evictions == 1
+
+
+def test_put_same_key_replaces_bytes():
+    c = PlanCache(max_entries=4, max_bytes=1000)
+    c.put("a", 1, nbytes=100)
+    c.put("a", 2, nbytes=300)
+    assert c.stats.bytes_in_use == 300 and len(c) == 1
+    assert c.peek("a") == 2
+
+
+def test_get_or_build_builds_once():
+    c = PlanCache(max_entries=4)
+    calls = []
+    for _ in range(3):
+        v = c.get_or_build("k", lambda: calls.append(1) or "built", nbytes=1)
+        assert v == "built"
+    assert len(calls) == 1
+    assert (c.stats.hits, c.stats.misses) == (2, 1)
+
+
+def test_oversized_plan_not_retained():
+    c = PlanCache(max_entries=4, max_bytes=10)
+    v = c.get_or_build("big", lambda: "plan", nbytes=100)
+    assert v == "plan" and len(c) == 0
+
+
+def test_oversized_put_keeps_resident_entries():
+    c = PlanCache(max_entries=4, max_bytes=100)
+    c.put("a", 1, nbytes=40)
+    c.put("b", 2, nbytes=40)
+    c.put("big", 3, nbytes=500)  # can never fit: must not flush a and b
+    assert c.keys == ["a", "b"]
+    assert c.stats.bytes_in_use == 80 and c.stats.evictions == 0
+
+
+def test_clear_resets_bytes():
+    c = PlanCache()
+    c.put("a", 1, nbytes=5)
+    c.clear()
+    assert len(c) == 0 and c.stats.bytes_in_use == 0
+
+
+def test_invalid_budgets_rejected():
+    with pytest.raises(ValueError):
+        PlanCache(max_entries=0)
+    with pytest.raises(ValueError):
+        PlanCache(max_bytes=0)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting of real plans
+# ---------------------------------------------------------------------------
+def test_plan_nbytes_walks_real_graph_bundle():
+    from repro.models.gnn import build_graph
+
+    g = build_graph(_coo(0), tile=64, backend_cap=16)
+    nb = plan_nbytes(g)
+    # at least the tile value array and the perm must be counted
+    assert nb >= g.tiles.vals.nbytes + np.asarray(g.perm).nbytes
+
+
+def test_plan_nbytes_dedupes_shared_arrays():
+    arr = np.zeros(1000, np.float32)
+    assert plan_nbytes({"a": arr, "b": arr}) == arr.nbytes

@@ -1,0 +1,407 @@
+"""Graph serving subsystem: block-diagonal composition, batched forward,
+and the GraphServeEngine (plan cache + padding buckets + scatter-back)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import COOMatrix, block_diag_coo, coo_from_dense
+from repro.models.gnn import (
+    GNNConfig,
+    build_batched_graph,
+    build_graph,
+    gnn_forward,
+    gnn_forward_batched,
+    init_gnn,
+)
+from repro.serve.graph_engine import (
+    GraphEngineConfig,
+    GraphRequest,
+    GraphServeEngine,
+    _bucket_nodes,
+    assemble_batched_graph,
+)
+from repro.simul.datasets import gcn_normalize, powerlaw_graph
+
+
+def _graphs(sizes, seed=0):
+    return [
+        gcn_normalize(powerlaw_graph(n, 4 * n, seed=seed + i))
+        for i, n in enumerate(sizes)
+    ]
+
+
+def _features(rng, adjs, d):
+    return [rng.standard_normal((a.shape[0], d)).astype(np.float32) for a in adjs]
+
+
+# ---------------------------------------------------------------------------
+# block_diag_coo
+# ---------------------------------------------------------------------------
+def test_block_diag_coo_roundtrip(rng):
+    mats = [
+        coo_from_dense((rng.random((m, n)) < 0.3) * rng.standard_normal((m, n)).astype(np.float32))
+        for m, n in [(5, 7), (3, 3), (6, 2)]
+    ]
+    comp, row_off, col_off = block_diag_coo(mats)
+    assert comp.shape == (14, 12)
+    assert list(row_off) == [0, 5, 8, 14]
+    assert list(col_off) == [0, 7, 10, 12]
+    dense = comp.to_dense()
+    for i, a in enumerate(mats):
+        np.testing.assert_allclose(
+            dense[row_off[i] : row_off[i + 1], col_off[i] : col_off[i + 1]],
+            a.to_dense(),
+        )
+    # off-diagonal blocks are structurally empty
+    assert comp.nnz == sum(a.nnz for a in mats)
+
+
+def test_block_diag_coo_pad_shape():
+    a = coo_from_dense(np.eye(3, dtype=np.float32))
+    comp, row_off, _ = block_diag_coo([a, a], pad_shape=(10, 10))
+    assert comp.shape == (10, 10)
+    assert comp.nnz == 6 and list(row_off) == [0, 3, 6]
+    with pytest.raises(ValueError):
+        block_diag_coo([a, a], pad_shape=(4, 4))
+
+
+def test_block_diag_coo_empty_list():
+    comp, row_off, col_off = block_diag_coo([])
+    assert comp.shape == (0, 0) and comp.nnz == 0
+    assert len(row_off) == 1 and len(col_off) == 1
+
+
+# ---------------------------------------------------------------------------
+# batched forward == per-graph forward
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["gcn", "sage", "gin", "gat"])
+def test_batched_forward_matches_per_graph(kind, rng):
+    adjs = _graphs([70, 130, 50])
+    xs = _features(rng, adjs, 16)
+    cfg = GNNConfig(name=kind, kind=kind, d_in=16, d_hidden=16, n_classes=4)
+    params, _ = init_gnn(jax.random.PRNGKey(0), cfg)
+    ref = [
+        np.asarray(
+            gnn_forward(params, cfg, build_graph(a, tile=64, backend_cap=64), jnp.asarray(x))
+        )
+        for a, x in zip(adjs, xs)
+    ]
+    bg = build_batched_graph(adjs, tile=64, backend_cap=64, pad_nodes=512)
+    outs = gnn_forward_batched(params, cfg, bg, xs)
+    assert len(outs) == len(ref)
+    for o, r in zip(outs, ref):
+        assert o.shape == r.shape
+        np.testing.assert_allclose(o, r, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["gcn", "sage", "gin", "gat"])
+def test_assembled_plan_matches_block_diag(kind, rng):
+    """Engine's index-arithmetic assembly == reference block_diag build —
+    including GAT, whose edge re-weighting exercises the per-member perm
+    shift (entry_off) in assemble_batched_graph."""
+    adjs = _graphs([60, 100, 40], seed=3)
+    xs = _features(rng, adjs, 8)
+    cfg = GNNConfig(name=kind, kind=kind, d_in=8, d_hidden=8, n_classes=4)
+    params, _ = init_gnn(jax.random.PRNGKey(1), cfg)
+    plans = [build_graph(a, tile=64, backend_cap=64) for a in adjs]
+    bg = assemble_batched_graph(plans, tile=64, pad_nodes=256)
+    assert bg.graph.n_nodes == 256
+    outs = gnn_forward_batched(params, cfg, bg, xs)
+    ref = [
+        np.asarray(
+            gnn_forward(params, cfg, p, jnp.asarray(x))
+        )
+        for p, x in zip(plans, xs)
+    ]
+    for o, r in zip(outs, ref):
+        np.testing.assert_allclose(o, r, atol=1e-5, rtol=1e-5)
+
+
+def test_bucket_nodes_ladder():
+    assert _bucket_nodes(100, (256, 512), 64) == 256
+    assert _bucket_nodes(300, (256, 512), 64) == 512
+    # past the ladder: next power of two, not a bespoke per-size pad
+    assert _bucket_nodes(600, (256, 512), 64) == 1024
+    assert _bucket_nodes(5000, (256, 512), 64) == 8192
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+def _engine(kind="gcn", **cfg_kw):
+    cfg = GNNConfig(name=kind, kind=kind, d_in=8, d_hidden=8, n_classes=4)
+    params, _ = init_gnn(jax.random.PRNGKey(0), cfg)
+    ecfg = GraphEngineConfig(tile=64, cap=64, **cfg_kw)
+    return GraphServeEngine({kind: (params, cfg)}, ecfg), params, cfg
+
+
+def test_engine_outputs_match_per_graph(rng):
+    adjs = _graphs([70, 130, 50, 200], seed=5)
+    xs = _features(rng, adjs, 8)
+    eng, params, cfg = _engine()
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+    done = eng.run()
+    assert len(done) == 4 and all(r.done for r in done)
+    for r in done:
+        ref = np.asarray(
+            gnn_forward(
+                params, cfg, build_graph(r.adj, tile=64, backend_cap=64), jnp.asarray(r.x)
+            )
+        )
+        assert r.out.shape == (r.adj.shape[0], 4)
+        np.testing.assert_allclose(r.out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_engine_repeat_stream_hits_cache(rng):
+    adjs = _graphs([60, 90], seed=7)
+    xs = _features(rng, adjs, 8)
+    eng, _, _ = _engine()
+    for wave in range(3):
+        for i, (a, x) in enumerate(zip(adjs, xs)):
+            eng.submit(GraphRequest(rid=wave * 10 + i, adj=a, x=x, model="gcn"))
+        eng.run()
+    m = eng.metrics()
+    # wave 1: 2 member misses + 1 composite miss; waves 2-3: composite hits
+    # short-circuit everything
+    assert m["plan_cache_misses"] == 3
+    assert m["plan_cache_hits"] >= 2
+    assert m["plan_cache_hit_rate"] > 0.3
+    assert m["launches"] == 3
+
+
+def test_engine_batches_bounded(rng):
+    adjs = _graphs([50] * 5, seed=9)
+    xs = _features(rng, adjs, 8)
+    eng, _, _ = _engine(max_batch_graphs=2)
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+    done = eng.run()
+    assert len(done) == 5
+    assert eng.metrics()["launches"] == 3  # ceil(5/2)
+
+
+def test_engine_node_budget_counts_aligned_footprint(rng):
+    # 100 raw nodes -> 128 tile-aligned; raw accounting would pack all three
+    # (300 <= 300), aligned accounting packs two (384 > 300)
+    adjs = _graphs([100, 100, 100], seed=17)
+    xs = _features(rng, adjs, 8)
+    eng, _, _ = _engine(max_batch_nodes=300)
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+    eng.run()
+    assert eng.metrics()["launches"] == 2
+
+
+def test_engine_config_rejects_nonpositive_limits():
+    with pytest.raises(ValueError):
+        GraphEngineConfig(max_batch_graphs=0)
+    with pytest.raises(ValueError):
+        GraphEngineConfig(max_batch_nodes=0)
+    with pytest.raises(ValueError):
+        GraphEngineConfig(tile=0)
+    with pytest.raises(ValueError):
+        GraphEngineConfig(cap=-1)
+    # a budget past the bucket ladder would unbound jit recompiles
+    with pytest.raises(ValueError, match="node bucket"):
+        GraphEngineConfig(max_batch_nodes=8192)
+    GraphEngineConfig(max_batch_nodes=8192, node_buckets=())  # explicit opt-out
+
+
+def test_engine_rejects_wrong_feature_width(rng):
+    eng, _, _ = _engine()
+    adj = _graphs([30], seed=19)[0]
+    with pytest.raises(ValueError, match="d_in"):
+        eng.submit(
+            GraphRequest(
+                rid=0, adj=adj, x=np.zeros((30, 5), np.float32), model="gcn"
+            )
+        )
+
+
+def test_engine_rejects_out_of_range_indices(rng):
+    # an index past the declared node count would land in a NEIGHBOR's
+    # block of the composite and corrupt a co-batched request
+    eng, _, _ = _engine()
+    bad = COOMatrix(
+        np.array([0, 1], np.int32),
+        np.array([0, 70], np.int32),  # 70 >= 60
+        np.ones(2, np.float32),
+        (60, 60),
+    )
+    with pytest.raises(ValueError, match="out of range"):
+        eng.submit(
+            GraphRequest(rid=0, adj=bad, x=np.zeros((60, 8), np.float32), model="gcn")
+        )
+
+
+def test_split_outputs_returns_copies(rng):
+    # views would pin the bucket-sized composite for the life of each output
+    adjs = _graphs([40, 40], seed=21)
+    xs = _features(rng, adjs, 8)
+    eng, _, _ = _engine()
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+    done = eng.run()
+    for r in done:
+        assert r.out.base is None
+
+
+def test_engine_node_budget_splits_batches(rng):
+    adjs = _graphs([200, 200, 200], seed=11)
+    xs = _features(rng, adjs, 8)
+    eng, _, _ = _engine(max_batch_nodes=256)
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+    eng.run()
+    assert eng.metrics()["launches"] == 3  # each graph alone busts the budget
+
+
+def test_engine_rejects_bad_requests(rng):
+    eng, _, _ = _engine()
+    adj = _graphs([30], seed=13)[0]
+    x = rng.standard_normal((30, 8)).astype(np.float32)
+    with pytest.raises(KeyError):
+        eng.submit(GraphRequest(rid=0, adj=adj, x=x, model="nope"))
+    with pytest.raises(ValueError):
+        eng.submit(GraphRequest(rid=0, adj=adj, x=x[:10], model="gcn"))
+    rect = COOMatrix(
+        np.zeros(1, np.int32), np.zeros(1, np.int32), np.ones(1, np.float32), (3, 4)
+    )
+    with pytest.raises(ValueError):
+        eng.submit(GraphRequest(rid=0, adj=rect, x=x[:3], model="gcn"))
+
+
+def test_engine_failed_wave_requeues_requests(rng):
+    # params built for gcn registered under a gat config: submit passes,
+    # the forward raises — the wave must land back on the queue, not vanish
+    cfg_bad = GNNConfig(name="gat", kind="gat", d_in=8, d_hidden=8, n_classes=4)
+    cfg_gcn = GNNConfig(name="gcn", kind="gcn", d_in=8, d_hidden=8, n_classes=4)
+    params, _ = init_gnn(jax.random.PRNGKey(0), cfg_gcn)
+    eng = GraphServeEngine({"gat": (params, cfg_bad)}, GraphEngineConfig(tile=64, cap=64))
+    adjs = _graphs([40, 40], seed=23)
+    xs = _features(rng, adjs, 8)
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gat"))
+    with pytest.raises(Exception):
+        eng.run()
+    assert sorted(r.rid for r in eng.queue) == [0, 1]
+    assert not any(r.done for r in eng.queue)
+
+
+def test_engine_poison_request_does_not_wedge(rng):
+    # a request that fails every wave must eventually be ejected so a
+    # retrying caller drains the queue instead of looping forever
+    cfg_bad = GNNConfig(name="gat", kind="gat", d_in=8, d_hidden=8, n_classes=4)
+    cfg_gcn = GNNConfig(name="gcn", kind="gcn", d_in=8, d_hidden=8, n_classes=4)
+    params, _ = init_gnn(jax.random.PRNGKey(0), cfg_gcn)
+    eng = GraphServeEngine(
+        {"gat": (params, cfg_bad), "gcn": (params, cfg_gcn)},
+        GraphEngineConfig(tile=64, cap=64),
+    )
+    adjs = _graphs([40, 40], seed=27)
+    xs = _features(rng, adjs, 8)
+    eng.submit(GraphRequest(rid=0, adj=adjs[0], x=xs[0], model="gat"))  # poison
+    eng.submit(GraphRequest(rid=1, adj=adjs[1], x=xs[1], model="gcn"))  # healthy
+    for _ in range(10):
+        if not eng.queue:
+            break
+        try:
+            eng.run()
+        except Exception:
+            pass
+    assert not eng.queue  # drained, no wedge
+    assert [r.rid for r in eng.completed] == [1]
+    assert [r.rid for r in eng.failed] == [0]
+    assert eng.failed[0].error is not None and not eng.failed[0].done
+    assert eng.metrics()["failed"] == 1
+
+
+def test_engine_equivalence_pallas_interpret_backend(rng):
+    """The assembled composite must also be correct under the Pallas kernel
+    semantics (PS strip zeroing on block-row change, repeated-coordinate
+    padding tiles) — the jnp reference masks padding differently and would
+    not catch a strip-ordering regression."""
+    adjs = _graphs([60, 100], seed=25)
+    xs = _features(rng, adjs, 8)
+    cfg = GNNConfig(
+        name="gcn", kind="gcn", d_in=8, d_hidden=8, n_classes=4,
+        backend="pallas_interpret",
+    )
+    params, _ = init_gnn(jax.random.PRNGKey(2), cfg)
+    eng = GraphServeEngine({"gcn": (params, cfg)}, GraphEngineConfig(tile=64, cap=64))
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+    done = eng.run()
+    for r in done:
+        ref = np.asarray(
+            gnn_forward(
+                params, cfg, build_graph(r.adj, tile=64, backend_cap=64),
+                jnp.asarray(r.x),
+            )
+        )
+        np.testing.assert_allclose(r.out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_engine_interrupt_consumes_no_retries(rng, monkeypatch):
+    # Ctrl-C mid-wave is not a request failure: the wave is restored
+    # untouched and no healthy request drifts toward ejection
+    import repro.serve.graph_engine as ge
+
+    eng, _, _ = _engine()
+    adjs = _graphs([40, 40], seed=29)
+    xs = _features(rng, adjs, 8)
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+
+    def boom(*a, **kw):
+        raise KeyboardInterrupt
+
+    monkeypatch.setattr(ge, "gnn_forward_batched", boom)
+    with pytest.raises(KeyboardInterrupt):
+        eng.run()
+    assert sorted(r.rid for r in eng.queue) == [0, 1]
+    assert all(r.retries == 0 and not r.isolate for r in eng.queue)
+    monkeypatch.undo()
+    assert sorted(r.rid for r in eng.run()) == [0, 1]
+
+
+def test_engine_partial_completions_survive_failed_run(rng):
+    # waves completed before a failing wave must be retrievable even though
+    # run() raised before returning
+    cfg_bad = GNNConfig(name="gat", kind="gat", d_in=8, d_hidden=8, n_classes=4)
+    cfg_gcn = GNNConfig(name="gcn", kind="gcn", d_in=8, d_hidden=8, n_classes=4)
+    params, _ = init_gnn(jax.random.PRNGKey(0), cfg_gcn)
+    eng = GraphServeEngine(
+        {"gat": (params, cfg_bad), "gcn": (params, cfg_gcn)},
+        GraphEngineConfig(tile=64, cap=64),
+    )
+    adjs = _graphs([40, 40], seed=31)
+    xs = _features(rng, adjs, 8)
+    eng.submit(GraphRequest(rid=0, adj=adjs[0], x=xs[0], model="gcn"))  # healthy
+    eng.submit(GraphRequest(rid=1, adj=adjs[1], x=xs[1], model="gat"))  # poison
+    with pytest.raises(Exception):
+        eng.run()
+    assert [r.rid for r in eng.last_completed] == [0]
+    assert eng.last_completed[0].out is not None
+
+
+def test_engine_mixed_model_kinds_batch_separately(rng):
+    cfg_a = GNNConfig(name="gcn", kind="gcn", d_in=8, d_hidden=8, n_classes=4)
+    cfg_b = GNNConfig(name="gin", kind="gin", d_in=8, d_hidden=8, n_classes=4)
+    pa, _ = init_gnn(jax.random.PRNGKey(0), cfg_a)
+    pb, _ = init_gnn(jax.random.PRNGKey(1), cfg_b)
+    eng = GraphServeEngine(
+        {"gcn": (pa, cfg_a), "gin": (pb, cfg_b)},
+        GraphEngineConfig(tile=64, cap=64),
+    )
+    adjs = _graphs([40, 40, 40, 40], seed=15)
+    xs = _features(rng, adjs, 8)
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn" if i % 2 else "gin"))
+    done = eng.run()
+    assert len(done) == 4
+    assert eng.metrics()["launches"] == 2  # one per kind
+    for r in done:
+        assert r.out.shape == (40, 4) and np.isfinite(r.out).all()

@@ -11,21 +11,16 @@ from repro.train import sharding as shd
 @pytest.fixture(scope="module")
 def mesh():
     # single-device container: a 1x1 mesh exercises the full code path
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def test_resolve_divisibility_fallback():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+def test_resolve_divisibility_fallback(mesh):
     # every dim divides 1 -> all rules apply
     spec = shd._resolve((16, 32), ("embed", "mlp"), shd.PARAM_RULES, mesh)
     assert spec == P("data", "model")
 
 
-def test_resolve_conflict_first_dim_wins():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+def test_resolve_conflict_first_dim_wins(mesh):
     # expert and mlp both want "model": expert (first) wins, mlp drops
     spec = shd._resolve((8, 16, 32), ("expert", "embed", "mlp"), shd.PARAM_RULES, mesh)
     assert spec == P("model", "data", None)

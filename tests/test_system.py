@@ -8,6 +8,8 @@ import pytest
 from repro.configs import ARCHS
 from repro.launch import train as train_mod
 
+pytestmark = pytest.mark.slow
+
 
 def test_lm_training_loss_decreases(tmp_path):
     losses = train_mod.main(
