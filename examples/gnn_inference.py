@@ -12,7 +12,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.gnn import GNNConfig, build_graph, gnn_forward, init_gnn
+from repro.models.gnn import (
+    GNNConfig,
+    build_graph,
+    gnn_forward,
+    gnn_forward_jit,
+    init_gnn,
+)
 from repro.simul.datasets import gcn_normalize, load
 
 # citeseer-scale: pallas interpret mode executes the kernel body per grid
@@ -28,10 +34,11 @@ for kind in ["gcn"]:
     cfg_pls = GNNConfig(name=kind, kind=kind, d_in=64, d_hidden=64, n_classes=16,
                         backend="pallas_interpret")
     params, _ = init_gnn(jax.random.PRNGKey(0), cfg_jnp)
-    f_jnp = jax.jit(lambda p, xx: gnn_forward(p, cfg_jnp, graph, xx))
-    out_j = f_jnp(params, x).block_until_ready()
+    # the Graph is a pytree ARGUMENT of the jitted forward (not a closure
+    # constant): swap graphs of the same shape without retracing
+    out_j = gnn_forward_jit(params, cfg_jnp, graph, x).block_until_ready()
     t0 = time.time()
-    out_j = f_jnp(params, x).block_until_ready()
+    out_j = gnn_forward_jit(params, cfg_jnp, graph, x).block_until_ready()
     t_jnp = time.time() - t0
     out_p = gnn_forward(params, cfg_pls, graph, x)
     err = float(jnp.abs(out_j - out_p).max())

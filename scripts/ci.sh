@@ -3,7 +3,19 @@
 # modules — a seconds-scale default loop.  Pass extra pytest args through,
 # e.g. `scripts/ci.sh -k serve`.  The full tier-1 command (ROADMAP.md)
 # remains `PYTHONPATH=src python -m pytest -x -q`.
+#
+# Two PR gates always hold:
+#   * the jitted-forward equivalence checks (whole GNN forward under one
+#     jax.jit must match the unjitted path for all model kinds) — part of
+#     the default suite; re-run explicitly only when "$@" filters might
+#     have deselected them, and
+#   * benchmarks/preprocess_bench.py (vectorized SCV tile construction
+#     >= 5x the scalar loop on a 1M-edge graph; emits BENCH_preprocess.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -q -m "not slow" "$@"
+python -m pytest -q -m "not slow" "$@"
+if [ "$#" -gt 0 ]; then
+  python -m pytest -q tests/test_scv_plan.py -k "jit" --no-header
+fi
+python benchmarks/preprocess_bench.py

@@ -5,6 +5,7 @@ from repro.core.aggregate import (
     aggregate_coo_scatter,
     aggregate_coo_segsum,
     aggregate_dense,
+    aggregate_scv_plan,
     aggregate_scv_tiles,
 )
 from repro.core.formats import (
@@ -23,14 +24,22 @@ from repro.core.formats import (
     csr_to_coo,
 )
 from repro.core.morton import morton_decode, morton_encode, morton_order, zcurve_tiles
-from repro.core.partition import Partition, load_imbalance, shard_tiles, split_equal_nnz
+from repro.core.partition import (
+    Partition,
+    load_imbalance,
+    shard_plan,
+    shard_tiles,
+    split_equal_nnz,
+)
 from repro.core.scv import (
     ROW_MAJOR,
     ZMORTON,
     SCVMatrix,
+    SCVPlan,
     SCVTiles,
     coo_to_scv,
     coo_to_scv_tiles,
+    plan_from_tiles,
     scv_to_tiles,
 )
 

@@ -10,10 +10,16 @@ This is the framework's first-class entry point for the paper's technique.
 * ``SCVMatrix``                     — logical SCV, executed via tiles
 * ``SCVTiles``                      — TPU path: Pallas kernel (or the jnp
                                       reference on CPU / under tests)
+* ``SCVPlan``                       — same TPU path, but the plan is a
+                                      registered pytree: array leaves +
+                                      static aux, so the call (and any
+                                      caller up to the whole GNN forward)
+                                      sits under a single ``jax.jit``
 
 All backends are numerically equivalent (validated by property tests).
-Device arrays are passed as a dict of jnp arrays so the function stays
-jit/pjit-friendly; the host format objects carry the static metadata.
+``aggregate_scv_plan`` is the jit-native entry point; the legacy
+``aggregate_scv_tiles`` (host object + loose arrays dict) remains for
+benchmarks and one-shot experiments and routes through the same kernels.
 """
 from __future__ import annotations
 
@@ -25,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import BCSRMatrix, COOMatrix, CSCMatrix, CSRMatrix
-from repro.core.scv import SCVMatrix, SCVTiles, scv_to_tiles
+from repro.core.scv import SCVMatrix, SCVPlan, SCVTiles, plan_from_tiles, scv_to_tiles
 
 
 # ---------------------------------------------------------------------------
@@ -43,23 +49,16 @@ def csr_device_arrays(a: CSRMatrix) -> dict[str, jnp.ndarray]:
 def scv_device_arrays(t: SCVTiles, ensure_coverage: bool = True) -> dict[str, jnp.ndarray]:
     """Device bundle; with ``ensure_coverage`` a zero-nnz dummy tile is
     appended for every empty PS block-row so the Pallas kernel defines the
-    whole output (see kernels/scv_spmm/ops.py)."""
-    tr, tc, rs, cs, vs, nz = (
-        t.tile_row, t.tile_col, t.rows, t.cols, t.vals, t.nnz_in_tile,
-    )
-    if ensure_coverage:
-        from repro.kernels.scv_spmm.ops import ensure_row_coverage
-
-        tr, tc, rs, cs, vs, nz = ensure_row_coverage(
-            tr, tc, rs, cs, vs, nz, t.padded_shape[0] // t.tile
-        )
+    whole output.  Thin dict view over :func:`plan_from_tiles` — the one
+    code path for coverage insertion and perm padding."""
+    p = plan_from_tiles(t, ensure_coverage=ensure_coverage, with_perm=False)
     return {
-        "tile_row": jnp.asarray(tr),
-        "tile_col": jnp.asarray(tc),
-        "rows": jnp.asarray(rs),
-        "cols": jnp.asarray(cs),
-        "vals": jnp.asarray(vs),
-        "nnz_in_tile": jnp.asarray(nz),
+        "tile_row": p.tile_row,
+        "tile_col": p.tile_col,
+        "rows": p.rows,
+        "cols": p.cols,
+        "vals": p.vals,
+        "nnz_in_tile": p.nnz_in_tile,
     }
 
 
@@ -148,10 +147,46 @@ def aggregate_scv_tiles(
     return out[: t.shape[0]]
 
 
+def aggregate_scv_plan(
+    p: SCVPlan,
+    z: jnp.ndarray,
+    *,
+    backend: str = "auto",
+    feature_block: int = 128,
+) -> jnp.ndarray:
+    """SCV aggregation over a :class:`SCVPlan` pytree — the jit-native path.
+
+    Every array the computation reads is a pytree leaf of ``p`` and every
+    piece of static configuration (tile, padded row count, backend
+    selection) comes from the plan's aux data, so this function — and any
+    caller threading plans around, up to ``models.gnn.gnn_forward`` — can
+    sit under one outer ``jax.jit`` with zero host round-trips per layer.
+    """
+    from repro.kernels.scv_spmm import ops as scv_ops  # local import: keep core light
+    from repro.kernels.scv_spmm import ref as scv_ref
+
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        out = scv_ref.scv_spmm_reference(
+            p.tile_row, p.tile_col, p.rows, p.cols, p.vals,
+            z, tile=p.tile, n_rows=p.padded_shape[0],
+            nnz_in_tile=p.nnz_in_tile,
+        )
+    elif backend in ("pallas", "pallas_interpret"):
+        out = scv_ops.scv_spmm_plan(
+            p, z, feature_block=feature_block,
+            interpret=(backend == "pallas_interpret" or jax.default_backend() != "tpu"),
+        )
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return out[: p.shape[0]]
+
+
 # ---------------------------------------------------------------------------
 # dispatch
 # ---------------------------------------------------------------------------
-Format = Union[np.ndarray, jnp.ndarray, COOMatrix, CSRMatrix, CSCMatrix, BCSRMatrix, SCVMatrix, SCVTiles]
+Format = Union[np.ndarray, jnp.ndarray, COOMatrix, CSRMatrix, CSCMatrix, BCSRMatrix, SCVMatrix, SCVTiles, SCVPlan]
 
 
 def aggregate(a: Format, z: jnp.ndarray, **kw: Any) -> jnp.ndarray:
@@ -177,6 +212,8 @@ def aggregate(a: Format, z: jnp.ndarray, **kw: Any) -> jnp.ndarray:
         return aggregate_scv_tiles(scv_to_tiles(a), z, **kw)
     if isinstance(a, SCVTiles):
         return aggregate_scv_tiles(a, z, **kw)
+    if isinstance(a, SCVPlan):
+        return aggregate_scv_plan(a, z, **kw)
     raise TypeError(f"unsupported adjacency format: {type(a)}")
 
 

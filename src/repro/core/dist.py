@@ -24,8 +24,8 @@ except ImportError:  # older jax keeps it under experimental
     from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.partition import Partition, shard_tiles, split_equal_nnz
-from repro.core.scv import SCVTiles
+from repro.core.partition import Partition, shard_plan, split_equal_nnz
+from repro.core.scv import SCVPlan, SCVTiles, plan_from_tiles
 
 
 @dataclasses.dataclass
@@ -40,13 +40,18 @@ class DistributedGraph:
     imbalance: float
 
 
-def distribute_tiles(tiles: SCVTiles, n_parts: int) -> DistributedGraph:
-    part = split_equal_nnz(tiles, n_parts)
-    stacked = shard_tiles(tiles, part)
+def distribute_plan(plan: SCVPlan, n_parts: int) -> DistributedGraph:
+    """Split an SCVPlan pytree into P equal-nnz tile spans for shard_map.
+
+    The span gather happens on device (``partition.shard_plan``); only the
+    span boundaries are computed host-side from the nnz histogram.
+    """
+    part = split_equal_nnz(plan, n_parts)
+    stacked = shard_plan(plan, part)
     width = part.part_tiles.shape[1]
 
     def dev(a):
-        return jnp.asarray(a.reshape((n_parts, width) + a.shape[1:]))
+        return a.reshape((n_parts, width) + a.shape[1:])
 
     arrays = {
         "tile_row": dev(stacked.tile_row),
@@ -60,11 +65,20 @@ def distribute_tiles(tiles: SCVTiles, n_parts: int) -> DistributedGraph:
 
     return DistributedGraph(
         arrays=arrays,
-        tile=tiles.tile,
-        n_rows_padded=tiles.padded_shape[0],
-        n_rows=tiles.shape[0],
+        tile=plan.tile,
+        n_rows_padded=plan.padded_shape[0],
+        n_rows=plan.shape[0],
         n_parts=n_parts,
         imbalance=load_imbalance(part),
+    )
+
+
+def distribute_tiles(tiles: SCVTiles, n_parts: int) -> DistributedGraph:
+    """Host-object compatibility wrapper: lift to a plan pytree and shard
+    that.  Coverage dummies are unnecessary here — the per-span reference
+    kernel (segment_sum) zero-defines unvisited rows on its own."""
+    return distribute_plan(
+        plan_from_tiles(tiles, ensure_coverage=False, with_perm=False), n_parts
     )
 
 

@@ -11,6 +11,10 @@ partitioning.  We realize this as:
 
 2. ``pad_parts_uniform`` — pad every span to the same tile count so the
    result stacks into one leading device axis for ``shard_map``.
+   ``shard_tiles`` materializes the stacked copy from the host object;
+   ``shard_plan`` does the same gather on an ``SCVPlan`` pytree's device
+   leaves (no host round-trip), which is what ``core.dist`` and the
+   serving path use.
 
 3. ``aggregate_sharded`` — each device aggregates its span into a *local*
    PS buffer, then partial results for boundary block-rows are merged with
@@ -21,10 +25,11 @@ partitioning.  We realize this as:
 from __future__ import annotations
 
 import dataclasses
+from typing import Union
 
 import numpy as np
 
-from repro.core.scv import SCVTiles
+from repro.core.scv import SCVPlan, SCVTiles
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,11 +42,12 @@ class Partition:
     n_parts: int
 
 
-def split_equal_nnz(tiles: SCVTiles, n_parts: int) -> Partition:
+def split_equal_nnz(tiles: Union[SCVTiles, SCVPlan], n_parts: int) -> Partition:
     """Greedy prefix split of the (already Z-ordered) tile sequence into
     spans of ~equal nnz.  Never reorders tiles — locality of the curve is
-    exactly what the paper relies on."""
-    nnz = tiles.nnz_in_tile.astype(np.int64)
+    exactly what the paper relies on.  Accepts the host ``SCVTiles`` or a
+    device ``SCVPlan`` (its ``nnz_in_tile`` leaf is read back once)."""
+    nnz = np.asarray(tiles.nnz_in_tile).astype(np.int64)
     total = int(nnz.sum())
     target = total / max(n_parts, 1)
     bounds = [0]
@@ -91,6 +97,42 @@ def shard_tiles(tiles: SCVTiles, part: Partition) -> SCVTiles:
         cap=tiles.cap,
         shape=tiles.shape,
         order=tiles.order,
+    )
+
+
+def shard_plan(plan: SCVPlan, part: Partition) -> SCVPlan:
+    """Shard the plan *pytree*: gather each part's tile span out of the
+    device arrays (part-padded slots become zero tiles, perm slots ``-1``).
+
+    The result is still one ``SCVPlan`` whose leaves have leading dim
+    ``P * tiles_per_part`` — reshape to ``(P, tiles_per_part, ...)`` for
+    ``shard_map`` (``core.dist.distribute_plan`` does exactly that).  The
+    gather runs on device; the host only computes the index vector, so the
+    tiles never round-trip back to numpy the way ``shard_tiles`` requires.
+    """
+    import jax.numpy as jnp
+
+    idx = part.part_tiles.ravel()
+    pad = idx < 0
+    idx_j = jnp.asarray(np.where(pad, 0, idx))
+    pad_j = jnp.asarray(pad)
+
+    def take(a, fill=0):
+        if a is None:
+            return None
+        out = jnp.asarray(a)[idx_j]
+        mask = pad_j.reshape((-1,) + (1,) * (out.ndim - 1))
+        return jnp.where(mask, jnp.asarray(fill, out.dtype), out)
+
+    return dataclasses.replace(
+        plan,
+        tile_row=take(plan.tile_row),
+        tile_col=take(plan.tile_col),
+        rows=take(plan.rows),
+        cols=take(plan.cols),
+        vals=take(plan.vals),
+        nnz_in_tile=take(plan.nnz_in_tile),
+        perm=take(plan.perm, fill=-1),
     )
 
 

@@ -17,14 +17,25 @@ Two representations are provided:
   scheduled so that all tiles of one PS block-row are consecutive — the
   Pallas analogue of "partial sums reused before eviction".
 
+* :class:`SCVPlan` — the *executable* plan: the SCVTiles arrays on device
+  (coverage dummies appended, perm padded), registered as a jax pytree so
+  a whole GNN forward over it can sit under one ``jax.jit``.  Array fields
+  are pytree **leaves**; ``tile`` / ``cap`` / ``shape`` / ``order`` are
+  **static aux data**, so jit specializes on them (and on leaf shapes)
+  exactly once per padding bucket.
+
 Construction is host-side preprocessing ("statically generated from the COO
-format ... nearly equivalent to creating a CSR or CSC matrix" — §III-C).
+format ... nearly equivalent to creating a CSR or CSC matrix" — §III-C);
+``coo_to_scv_tiles`` emits tiles with vectorized numpy scatter, so the cost
+really is a couple of sorts plus O(nnz) array ops even at million-edge
+scale (``benchmarks/preprocess_bench.py`` gates this).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
+import jax
 import numpy as np
 
 from repro.core import morton
@@ -156,7 +167,7 @@ class SCVTiles:
     cap: int
     shape: tuple[int, int]  # original (unpadded) matrix shape
     order: str
-    perm: np.ndarray = None  # int64[nt, cap]: source COO entry of each slot (-1 pad)
+    perm: Optional[np.ndarray] = None  # int64[nt, cap]: source COO entry of each slot (-1 pad)
 
     @property
     def n_tiles(self) -> int:
@@ -219,13 +230,14 @@ def _auto_cap(counts: np.ndarray, tile: int) -> int:
     return int(best)
 
 
-def coo_to_scv_tiles(
-    a: COOMatrix,
-    tile: int,
-    cap: Optional[int] = None,
-    order: str = ZMORTON,
-) -> SCVTiles:
-    """COO -> device tile layout (see class docstring)."""
+def _tile_sort(a: COOMatrix, tile: int, order: str):
+    """Shared prologue of the tile builders: sort entries into SCV
+    column-vector order within tiles and schedule the tiles.
+
+    Returns ``(utrow, utcol, start, counts, sched, eorder, lrow_s, lcol_s,
+    vals_s)`` — per-unique-tile coordinates / entry spans plus the sorted
+    entry arrays.
+    """
     T = int(tile)
     m, n = a.shape
     nbc = -(-n // T)
@@ -237,14 +249,15 @@ def coo_to_scv_tiles(
     # SCV discipline within a tile: column-vector order (local col, row)
     eorder = np.argsort(tkey * (T * T) + lcol * T + lrow, kind="stable")
     tkey_s = tkey[eorder]
-    uniq, start = np.unique(tkey_s, return_index=True)
+    # run-starts on the sorted keys (np.unique would sort a second time)
+    if len(tkey_s):
+        start = np.flatnonzero(np.r_[True, tkey_s[1:] != tkey_s[:-1]])
+    else:
+        start = np.zeros(0, np.int64)
+    uniq = tkey_s[start]
     counts = np.diff(np.append(start, len(tkey_s))).astype(np.int64)
     utrow = (uniq // nbc).astype(np.int64)
     utcol = (uniq % nbc).astype(np.int64)
-
-    if cap is None:
-        cap = _auto_cap(counts, T)
-    cap = int(cap)
 
     # Tile schedule: group by block-row (consecutive PS windows); within a
     # block-row, Z order degenerates to ascending column — the cross-row
@@ -257,8 +270,102 @@ def coo_to_scv_tiles(
         sched = np.lexsort((utcol, utrow))
     else:
         raise ValueError(f"unknown order {order!r}")
+    return utrow, utcol, start, counts, sched, eorder, lrow[eorder], lcol[eorder], a.vals[eorder]
 
-    # split heavy tiles into chains; emit final static arrays
+
+def coo_to_scv_tiles(
+    a: COOMatrix,
+    tile: int,
+    cap: Optional[int] = None,
+    order: str = ZMORTON,
+) -> SCVTiles:
+    """COO -> device tile layout (see class docstring).
+
+    Heavy tiles (more than ``cap`` entries) split into chains of logical
+    tiles sharing coordinates.  Emission is vectorized numpy scatter: each
+    output slot ``(chunk, s)`` with ``s < nnz_in_tile[chunk]`` pulls sorted
+    entry ``start[tile(chunk)] + chunk_local * cap + s`` — no Python loop
+    over tiles, so plan construction stays a few sorts + O(nnz) array ops
+    at million-edge scale (``_coo_to_scv_tiles_loop`` keeps the scalar
+    emitter as the equivalence/benchmark reference).
+    """
+    T = int(tile)
+    utrow, utcol, start, counts, sched, eorder, lrow_s, lcol_s, vals_s = _tile_sort(
+        a, T, order
+    )
+    if cap is None:
+        cap = _auto_cap(counts, T)
+    cap = int(cap)
+
+    # chunks (logical output tiles) in schedule order
+    nu = len(counts)
+    n_chunks = (-(-counts // cap)).astype(np.int64)
+    cc = n_chunks[sched]  # chunks per scheduled tile
+    nt = int(cc.sum()) if len(cc) else 0
+    chunk_tile = np.repeat(sched, cc)  # unique-tile index of each chunk
+    first = np.cumsum(cc) - cc  # first chunk slot of each scheduled tile
+    chunk_local = np.arange(nt, dtype=np.int64) - np.repeat(first, cc)
+
+    tile_row = utrow[chunk_tile].astype(np.int32)
+    tile_col = utcol[chunk_tile].astype(np.int32)
+    nnz_out = np.minimum(
+        cap, counts[chunk_tile] - chunk_local * cap
+    ).astype(np.int32) if nt else np.zeros(0, np.int32)
+
+    # per-entry destination slot: sorted entry j of tile t lands in chunk
+    # ``chunk_first[t] + j // cap``, slot ``j % cap`` — an O(nnz) flat
+    # scatter with no [nt, cap] index intermediates
+    nnz = eorder.shape[0]
+    rank = np.empty(nu, np.int64)
+    rank[sched] = np.arange(nu, dtype=np.int64)
+    chunk_first = first[rank]  # first output chunk of each unique tile
+    inv = np.repeat(np.arange(nu, dtype=np.int64), counts)  # tile of entry
+    pos = np.arange(nnz, dtype=np.int64) - np.repeat(start, counts)
+    dst = (chunk_first[inv] + pos // cap) * cap + pos % cap
+    rows_out = np.zeros(nt * cap, np.int32)
+    cols_out = np.zeros(nt * cap, np.int32)
+    vals_out = np.zeros(nt * cap, a.vals.dtype)
+    perm_out = np.full(nt * cap, -1, np.int64)
+    rows_out[dst] = lrow_s
+    cols_out[dst] = lcol_s
+    vals_out[dst] = vals_s
+    perm_out[dst] = eorder
+    rows_out = rows_out.reshape(nt, cap)
+    cols_out = cols_out.reshape(nt, cap)
+    vals_out = vals_out.reshape(nt, cap)
+    perm_out = perm_out.reshape(nt, cap)
+    return SCVTiles(
+        tile_row=tile_row,
+        tile_col=tile_col,
+        rows=rows_out,
+        cols=cols_out,
+        vals=vals_out,
+        nnz_in_tile=nnz_out,
+        tile=T,
+        cap=cap,
+        shape=a.shape,
+        order=order,
+        perm=perm_out,
+    )
+
+
+def _coo_to_scv_tiles_loop(
+    a: COOMatrix,
+    tile: int,
+    cap: Optional[int] = None,
+    order: str = ZMORTON,
+) -> SCVTiles:
+    """Scalar per-tile emission loop — the pre-vectorization construction,
+    kept as the byte-identical reference for tests and
+    ``benchmarks/preprocess_bench.py``."""
+    T = int(tile)
+    utrow, utcol, start, counts, sched, eorder, lrow_s, lcol_s, vals_s = _tile_sort(
+        a, T, order
+    )
+    if cap is None:
+        cap = _auto_cap(counts, T)
+    cap = int(cap)
+
     n_chunks = (-(-counts // cap)).astype(np.int64)
     nt = int(n_chunks.sum()) if len(n_chunks) else 0
     tile_row = np.zeros(nt, np.int32)
@@ -269,9 +376,6 @@ def coo_to_scv_tiles(
     nnz_out = np.zeros(nt, np.int32)
     perm_out = np.full((nt, cap), -1, np.int64)
 
-    lrow_s = lrow[eorder]
-    lcol_s = lcol[eorder]
-    vals_s = a.vals[eorder]
     out = 0
     for b in sched:
         s, k = int(start[b]), int(counts[b])
@@ -304,6 +408,120 @@ def coo_to_scv_tiles(
 
 def scv_to_tiles(a: SCVMatrix, cap: Optional[int] = None) -> SCVTiles:
     return coo_to_scv_tiles(a.to_coo(), a.vector_height, cap=cap, order=a.order)
+
+
+# ---------------------------------------------------------------------------
+# Executable plan pytree (device arrays + static aux; jit end-to-end)
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SCVPlan:
+    """First-class jit-able SCV aggregation plan.
+
+    Pytree contract (the whole point of this class):
+
+    * **Leaves** — the device arrays ``tile_row``, ``tile_col``, ``rows``,
+      ``cols``, ``vals``, ``nnz_in_tile``, ``perm``.  They trace through
+      ``jax.jit`` / ``shard_map`` / ``jax.grad`` like any other argument.
+      ``perm`` may be ``None`` (plans that never re-weight edges).
+    * **Static aux data** — ``tile``, ``cap``, ``shape``, ``order``.  jit
+      specializes on them (plus leaf shapes); two plans with equal aux and
+      equal array shapes share one trace, which is what bounds recompiles
+      to one per padding bucket.
+
+    Unlike :class:`SCVTiles` (the host-side construction output), a plan
+    always carries its coverage dummy tiles — one zero-nnz tile per
+    otherwise-unvisited PS block-row, so the Pallas kernel defines the
+    whole output — and its ``perm`` is padded to the covered tile count
+    with ``-1`` ("no source entry"; consumers append a zero to the edge
+    array so ``-1`` gathers it).
+    """
+
+    tile_row: Any  # i32[nt] (coverage dummies included)
+    tile_col: Any  # i32[nt]
+    rows: Any  # i32[nt, cap] local row within tile
+    cols: Any  # i32[nt, cap] local col within tile
+    vals: Any  # f32[nt, cap] (0 in padding slots)
+    nnz_in_tile: Any  # i32[nt]
+    perm: Any  # i32[nt, cap] source COO entry per slot (-1 pad), or None
+    tile: int  # T — static
+    cap: int  # static
+    shape: tuple[int, int]  # original (unpadded) matrix shape — static
+    order: str  # static
+
+    def tree_flatten(self):
+        return (
+            (self.tile_row, self.tile_col, self.rows, self.cols, self.vals,
+             self.nnz_in_tile, self.perm),
+            (self.tile, self.cap, self.shape, self.order),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.tile_row.shape[0])
+
+    @property
+    def padded_shape(self) -> tuple[int, int]:
+        T = self.tile
+        m, n = self.shape
+        return (-(-m // T) * T, -(-n // T) * T)
+
+    @property
+    def n_row_blocks(self) -> int:
+        return self.padded_shape[0] // self.tile
+
+    def with_vals(self, vals) -> "SCVPlan":
+        """Same plan, re-weighted entry values (GAT's per-edge attention)."""
+        return dataclasses.replace(self, vals=vals)
+
+
+def plan_from_tiles(
+    t: SCVTiles, ensure_coverage: bool = True, with_perm: bool = True
+) -> SCVPlan:
+    """SCVTiles (host) -> SCVPlan (device pytree).
+
+    The single code path for coverage-dummy insertion and perm padding:
+    every consumer (single-graph ``build_graph``, the serving engine's
+    composite assembly, ``scv_device_arrays``) builds plans here, so the
+    "dummy rows carry perm == -1" invariant lives in exactly one place.
+    """
+    import jax.numpy as jnp
+
+    tr, tc, rs, cs, vs, nz = (
+        t.tile_row, t.tile_col, t.rows, t.cols, t.vals, t.nnz_in_tile,
+    )
+    if ensure_coverage:
+        from repro.kernels.scv_spmm.ops import ensure_row_coverage
+
+        tr, tc, rs, cs, vs, nz = ensure_row_coverage(
+            tr, tc, rs, cs, vs, nz, t.padded_shape[0] // t.tile
+        )
+    perm = None
+    if with_perm and t.perm is not None:
+        if t.nnz >= 2**31:  # device perm is i32; refuse to wrap silently
+            raise ValueError(
+                f"entry count {t.nnz} overflows the int32 perm leaf"
+            )
+        pp = np.full((len(tr), t.cap), -1, np.int32)
+        pp[: t.perm.shape[0]] = t.perm.astype(np.int32)
+        perm = jnp.asarray(pp)
+    return SCVPlan(
+        tile_row=jnp.asarray(tr),
+        tile_col=jnp.asarray(tc),
+        rows=jnp.asarray(rs),
+        cols=jnp.asarray(cs),
+        vals=jnp.asarray(vs),
+        nnz_in_tile=jnp.asarray(nz),
+        perm=perm,
+        tile=t.tile,
+        cap=t.cap,
+        shape=t.shape,
+        order=t.order,
+    )
 
 
 # ---------------------------------------------------------------------------

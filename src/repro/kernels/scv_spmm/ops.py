@@ -56,8 +56,12 @@ def _pad_z(z: jnp.ndarray, tile: int, feature_block: int) -> jnp.ndarray:
     return jnp.zeros((np_, fp), z.dtype).at[:n, :f].set(z)
 
 
-# custom_vjp over (vals, z); index arrays are non-differentiable ints.
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 7, 8, 9, 10))
+# custom_vjp over (vals, z).  The integer index arrays are regular
+# (residual-carried) arguments rather than nondiff_argnums: nondiff_argnums
+# rejects tracers, and under an end-to-end jitted GNN forward (plans are
+# pytree *arguments*, not closure constants) every plan array arrives as a
+# tracer.  Their cotangents are symbolic float0 zeros.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
 def _spmm(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, tile, n_rows, feature_block, interpret):
     return scv_spmm_pallas(
         tile_row, tile_col, nnz_in_tile, rows, cols, vals, z,
@@ -67,11 +71,11 @@ def _spmm(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, tile, n_rows, fe
 
 def _spmm_fwd(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, tile, n_rows, feature_block, interpret):
     out = _spmm(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, tile, n_rows, feature_block, interpret)
-    return out, (vals, z)
+    return out, (tile_row, tile_col, nnz_in_tile, rows, cols, vals, z)
 
 
-def _spmm_bwd(tile_row, tile_col, nnz_in_tile, rows, cols, tile, n_rows, feature_block, interpret, res, g):
-    vals, z = res
+def _spmm_bwd(tile, n_rows, feature_block, interpret, res, g):
+    tile_row, tile_col, nnz_in_tile, rows, cols, vals, z = res
     grows = (tile_row[:, None] * tile + rows).reshape(-1)
     gcols = (tile_col[:, None] * tile + cols).reshape(-1)
     gf = g.astype(jnp.float32)
@@ -84,7 +88,14 @@ def _spmm_bwd(tile_row, tile_col, nnz_in_tile, rows, cols, tile, n_rows, feature
     # d/dZ = A^T g : scatter-add g rows into z rows, weighted
     dz = jnp.zeros(z.shape, jnp.float32)
     dz = dz.at[gcols].add(gf[grows] * vals.reshape(-1)[:, None].astype(jnp.float32))
-    return (dvals, dz.astype(z.dtype))
+
+    def f0(a):  # integer-typed primals take float0 cotangents
+        return np.zeros(a.shape, jax.dtypes.float0)
+
+    return (
+        f0(tile_row), f0(tile_col), f0(nnz_in_tile), f0(rows), f0(cols),
+        dvals, dz.astype(z.dtype),
+    )
 
 
 _spmm.defvjp(_spmm_fwd, _spmm_bwd)
@@ -128,6 +139,27 @@ def scv_spmm(
         interpret,
     )
     return out[:, :f_orig]
+
+
+def scv_spmm_plan(
+    plan,
+    z: jnp.ndarray,
+    *,
+    feature_block: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``scv_spmm`` over a ``core.scv.SCVPlan`` pytree.
+
+    All static kernel configuration (tile size, padded row count, entry
+    capacity via the leaf shapes) comes from the plan's aux data — nothing
+    needs to be threaded alongside the arrays, so callers stay jit-able.
+    """
+    return scv_spmm(
+        plan.tile_row, plan.tile_col, plan.rows, plan.cols, plan.vals, z,
+        tile=plan.tile, n_rows=plan.padded_shape[0],
+        nnz_in_tile=plan.nnz_in_tile,
+        feature_block=feature_block, interpret=interpret,
+    )
 
 
 def scv_spmm_reference(*args, **kw):

@@ -6,9 +6,14 @@ this is the paper's technique as a first-class framework feature, and it
 is *trainable*: edge weights flow through the kernel's custom VJP (the
 paper's future-work item (i)).
 
-Graphs are passed as a ``Graph`` bundle carrying the COO plus prebuilt SCV
-tiles; per-edge attention (GAT) re-weights tile values through
-``SCVTiles.perm``.
+``Graph`` and ``BatchedGraph`` are registered jax pytrees wrapping an
+``SCVPlan``: device arrays are leaves, counts/offsets are static aux data.
+``gnn_forward`` and ``gnn_forward_batched`` therefore run under a single
+outer ``jax.jit`` (``gnn_forward_jit`` is the prebuilt wrapper) — every
+layer's combination *and* aggregation compiles into one XLA program, with
+retraces bounded by the padding buckets because jit keys only on leaf
+shapes + static aux.  Per-edge attention (GAT) re-weights the plan's tile
+values through its ``perm`` leaf.
 """
 from __future__ import annotations
 
@@ -19,51 +24,68 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregate import aggregate_scv_tiles, scv_device_arrays
+from repro.core.aggregate import aggregate_scv_plan
 from repro.core.formats import COOMatrix, block_diag_coo
-from repro.core.scv import SCVTiles, coo_to_scv_tiles
+from repro.core.scv import SCVPlan, coo_to_scv_tiles, plan_from_tiles
 from repro.models.layers import make_param, split_tree
 
 
+@jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class Graph:
-    """Device-ready graph: COO arrays + SCV tiles + degree info."""
+    """Device-ready graph plan, registered as a jax pytree.
+
+    Leaves: the ``SCVPlan`` (itself a pytree) and the optional COO edge
+    arrays (``rows`` / ``cols`` / ``vals`` — only GAT's attention reads
+    them; batched composites may omit them, see
+    ``serve.graph_engine.assemble_batched_graph``).  Static aux:
+    ``n_nodes``.
+    """
 
     n_nodes: int
-    rows: jnp.ndarray  # i32[E] (normalized adjacency entries)
-    cols: jnp.ndarray
-    vals: jnp.ndarray  # f32[E] normalized weights (GCN) or 1s
-    tiles: SCVTiles
-    tile_arrays: dict  # device bundle incl. dummy coverage rows
-    perm: jnp.ndarray  # i64[nt, cap] source entry of each tile slot
+    plan: SCVPlan
+    rows: Optional[jnp.ndarray] = None  # i32[E] (normalized adjacency entries)
+    cols: Optional[jnp.ndarray] = None
+    vals: Optional[jnp.ndarray] = None  # f32[E] normalized weights (GCN) or 1s
+
+    def tree_flatten(self):
+        return (self.plan, self.rows, self.cols, self.vals), (self.n_nodes,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], *children)
 
 
-def build_graph(adj: COOMatrix, tile: int = 64, backend_cap: Optional[int] = None) -> Graph:
+def build_graph(
+    adj: COOMatrix,
+    tile: int = 64,
+    backend_cap: Optional[int] = None,
+    with_edges: bool = True,
+) -> Graph:
     tiles = coo_to_scv_tiles(adj, tile, cap=backend_cap)
-    arrays = scv_device_arrays(tiles)
-    nt_cov = arrays["tile_row"].shape[0]
-    perm = np.full((nt_cov, tiles.cap), -1, np.int64)
-    perm[: tiles.perm.shape[0]] = tiles.perm
-    return Graph(
-        n_nodes=adj.shape[0],
-        rows=jnp.asarray(adj.rows),
-        cols=jnp.asarray(adj.cols),
-        vals=jnp.asarray(adj.vals),
-        tiles=tiles,
-        tile_arrays=arrays,
-        perm=jnp.asarray(perm),
-    )
+    plan = plan_from_tiles(tiles)  # coverage dummies + perm padding, one path
+    if with_edges:
+        rows, cols, vals = (
+            jnp.asarray(adj.rows), jnp.asarray(adj.cols), jnp.asarray(adj.vals),
+        )
+    else:
+        rows = cols = vals = None
+    return Graph(n_nodes=adj.shape[0], plan=plan, rows=rows, cols=cols, vals=vals)
 
 
 def _agg(g: Graph, z, edge_vals=None, backend="jnp"):
     """Aggregate with optional per-edge re-weighting (GAT)."""
-    arrays = g.tile_arrays
+    plan = g.plan
     if edge_vals is not None:
+        if plan.perm is None:
+            raise ValueError(
+                "per-edge re-weighting needs the plan's perm leaf; this plan "
+                "was built without it (with_edges/with_perm disabled)"
+            )
+        # perm == -1 (padding slot) gathers the appended zero
         ev = jnp.concatenate([edge_vals, jnp.zeros((1,), edge_vals.dtype)])
-        arrays = dict(arrays, vals=ev[g.perm].astype(arrays["vals"].dtype))
-    return aggregate_scv_tiles(g.tiles, z, backend=backend, arrays=arrays)[
-        : g.n_nodes
-    ]
+        plan = plan.with_vals(ev[plan.perm].astype(plan.vals.dtype))
+    return aggregate_scv_plan(plan, z, backend=backend)[: g.n_nodes]
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +143,11 @@ def init_gat_layer(key, d_in, d_out):
 def gat_layer(p, g: Graph, h, backend="jnp"):
     """Single-head GAT: per-edge attention -> SCV aggregation with
     re-weighted values (weighted aggregation, §IV-D)."""
+    if g.rows is None:
+        raise ValueError(
+            "GAT needs the graph's COO edge arrays; build the plan with "
+            "with_edges=True (serving: assemble_batched_graph(with_edges=True))"
+        )
     z = h @ p["w"].astype(h.dtype)
     e_src = z @ p["a_src"].astype(h.dtype)  # [N]
     e_dst = z @ p["a_dst"].astype(h.dtype)
@@ -166,6 +193,9 @@ def init_gnn(key, cfg: GNNConfig):
 
 
 def gnn_forward(params, cfg: GNNConfig, g: Graph, x):
+    """Full multi-layer forward.  Pure function of pytree arguments —
+    ``g`` is a registered pytree and ``cfg`` is hashable — so the whole
+    thing jits: see ``gnn_forward_jit``."""
     _, layer_fn = _LAYERS[cfg.kind]
     h = x
     for i in range(cfg.n_layers):
@@ -175,11 +205,17 @@ def gnn_forward(params, cfg: GNNConfig, g: Graph, x):
     return h
 
 
+#: End-to-end jitted forward: one XLA program per (cfg, graph aux + leaf
+#: shapes, x shape) — i.e. at most one trace per serving padding bucket.
+gnn_forward_jit = jax.jit(gnn_forward, static_argnames=("cfg",))
+
+
 # ---------------------------------------------------------------------------
 # batched multi-graph forward (serving path)
 # ---------------------------------------------------------------------------
 
 
+@jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class BatchedGraph:
     """Many small graphs composed into one block-diagonal ``Graph``.
@@ -192,12 +228,36 @@ class BatchedGraph:
     jit sees few distinct shapes).  ``n_real_nodes`` is the total real node
     count across members — NOT a row boundary; always use the offset/count
     arrays to locate real rows.
+
+    Pytree: the composite ``graph`` is the only leaf subtree; the offset /
+    count arrays are static aux data (as int tuples), so the per-member
+    scatter/split slices stay Python ints under jit.  Note this makes the
+    member layout part of a jit trace signature — the serving engine
+    therefore jits the composite ``gnn_forward`` (whose signature depends
+    only on the padding bucket) and keeps the member bookkeeping eager.
     """
 
     graph: Graph
     node_offsets: np.ndarray  # int64[k+1] — request i starts at composite row off[i]
     node_counts: np.ndarray  # int64[k] — request i owns off[i] : off[i]+counts[i]
     n_real_nodes: int
+
+    def tree_flatten(self):
+        return (self.graph,), (
+            tuple(int(o) for o in self.node_offsets),
+            tuple(int(c) for c in self.node_counts),
+            self.n_real_nodes,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        off, cnt, n_real = aux
+        return cls(
+            graph=children[0],
+            node_offsets=np.asarray(off, np.int64),
+            node_counts=np.asarray(cnt, np.int64),
+            n_real_nodes=n_real,
+        )
 
     @property
     def n_graphs(self) -> int:
@@ -230,11 +290,23 @@ def build_batched_graph(
     )
 
 
-def batch_features(bg: BatchedGraph, xs: list) -> jnp.ndarray:
+def batch_features(bg: BatchedGraph, xs) -> jnp.ndarray:
     """Stack per-request feature matrices into the composite node space
-    (zeros in padding rows)."""
+    (zeros in padding rows).
+
+    Works both eagerly (numpy fill, one host->device transfer) and under a
+    jit trace (static-slice ``.at[].set`` updates — the offsets are static
+    aux of ``bg``), so ``gnn_forward_batched`` is jit-able end to end.
+    """
     if len(xs) != bg.n_graphs:
         raise ValueError(f"{len(xs)} feature blocks for {bg.n_graphs} graphs")
+    if any(isinstance(xi, jax.core.Tracer) for xi in xs):
+        d = int(xs[0].shape[1]) if xs else 0
+        x = jnp.zeros((bg.graph.n_nodes, d), jnp.float32)
+        for i, xi in enumerate(xs):
+            s, c = int(bg.node_offsets[i]), int(bg.node_counts[i])
+            x = x.at[s : s + c].set(xi.astype(jnp.float32))
+        return x
     d = int(np.asarray(xs[0]).shape[1]) if xs else 0
     x = np.zeros((bg.graph.n_nodes, d), np.float32)
     for i, xi in enumerate(xs):
@@ -243,26 +315,37 @@ def batch_features(bg: BatchedGraph, xs: list) -> jnp.ndarray:
     return jnp.asarray(x)
 
 
-def split_outputs(bg: BatchedGraph, out: jnp.ndarray) -> list[np.ndarray]:
+def split_outputs(bg: BatchedGraph, out) -> list:
     """Scatter the composite output back into per-request blocks.
 
-    Blocks are copies, not views: a view would pin the whole bucket-sized
-    composite alive for as long as any request retains its (much smaller)
-    output."""
-    host = np.asarray(out)
-    return [
-        host[
-            int(bg.node_offsets[i]) : int(bg.node_offsets[i]) + int(bg.node_counts[i])
-        ].copy()
+    Eagerly, blocks are numpy copies, not views: a view would pin the whole
+    bucket-sized composite alive for as long as any request retains its
+    (much smaller) output.  Under a jit trace, blocks are static slices of
+    the traced composite (XLA owns the buffers there).
+    """
+    spans = [
+        (int(bg.node_offsets[i]), int(bg.node_counts[i]))
         for i in range(bg.n_graphs)
     ]
+    if isinstance(out, jax.core.Tracer):
+        return [out[s : s + c] for s, c in spans]
+    host = np.asarray(out)
+    return [host[s : s + c].copy() for s, c in spans]
 
 
-def gnn_forward_batched(params, cfg: GNNConfig, bg: BatchedGraph, xs: list):
+def gnn_forward_batched(params, cfg: GNNConfig, bg: BatchedGraph, xs):
     """One forward over the block-diagonal composite; returns the
     per-request outputs (exactly ``gnn_forward`` on each graph, up to
-    float-add reassociation across tile boundaries)."""
-    out = gnn_forward(params, cfg, bg.graph, batch_features(bg, xs))
+    float-add reassociation across tile boundaries).
+
+    The composite forward runs through ``gnn_forward_jit`` (nested jit is
+    inlined when this function is itself traced), so the per-layer hot path
+    never round-trips through Python dispatch; only the per-member
+    scatter/split bookkeeping stays host-side when called eagerly.  The
+    function is also directly wrappable in ``jax.jit`` (``bg`` is a pytree
+    whose member layout is static aux).
+    """
+    out = gnn_forward_jit(params, cfg, bg.graph, batch_features(bg, xs))
     return split_outputs(bg, out)
 
 

@@ -8,21 +8,29 @@ entire wave runs as **one** SCV aggregation launch per layer.
 Three mechanisms make this a serving system rather than a loop:
 
 1. **Plan cache** (``plan_cache.py``) — the §III-C host-side SCV build is
-   content-addressed and LRU-cached at two levels: per-graph ``Graph``
-   bundles (hot graphs skip preprocessing) and assembled composite batches
-   (hot *batches* skip even the concatenation).
+   content-addressed and LRU-cached (with an optional TTL) at two levels:
+   per-graph ``Graph`` bundles (hot graphs skip preprocessing) and
+   assembled composite batches (hot *batches* skip even the
+   concatenation).
 
 2. **Composite assembly from cached plans** — because every member plan is
-   padded to the tile grid, a batch plan is pure index arithmetic: member
-   tile coordinates are shifted by the member's block offset and the tile
-   arrays concatenated.  No re-tiling, no re-sorting, no COO scan.  The
-   block-diagonal structure guarantees the result equals per-graph
-   aggregation stacked (``core.formats.block_diag_coo`` is the reference
-   construction; ``tests/test_serve_graph.py`` checks both agree).
+   padded to the tile grid, a batch plan is pure index arithmetic over the
+   members' ``SCVPlan`` pytrees: member tile coordinates are shifted by
+   the member's block offset and the plan leaves concatenated (vectorized
+   numpy — no Python loop over tiles).  No re-tiling, no re-sorting, no
+   COO scan.  The block-diagonal structure guarantees the result equals
+   per-graph aggregation stacked (``core.formats.block_diag_coo`` is the
+   reference construction; ``tests/test_serve_graph.py`` checks both
+   agree).  The composite COO edge arrays + perm are built only when the
+   batch's model kind needs them (GAT) — which puts the model-kind
+   component into the composite cache key (see ``_batch_plan``).
 
 3. **Padding buckets** — composite node counts are rounded up to a fixed
    bucket ladder, so XLA sees a handful of distinct shapes instead of one
-   per batch and jit recompilation is bounded.
+   per batch and jit recompilation is bounded.  A wave then runs through
+   the end-to-end jitted ``gnn_forward`` over the composite plan pytree —
+   a cache hit hands jit a ready device pytree and the whole multi-layer
+   forward is one XLA program.
 
 The engine is synchronous and single-host (like ``ServeEngine``); the
 launch/ layer owns meshes and process fan-out.
@@ -38,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import COOMatrix
-from repro.core.scv import SCVTiles
+from repro.core.scv import SCVPlan
 from repro.models.gnn import (
     BatchedGraph,
     GNNConfig,
@@ -73,6 +81,7 @@ class GraphEngineConfig:
     node_buckets: tuple[int, ...] = (256, 512, 1024, 2048, 4096)
     cache_entries: int = 256
     cache_bytes: int = 256 << 20
+    plan_ttl_s: Optional[float] = None  # expire cached plans after this age
     completed_history: int = 1024  # recent requests kept for inspection
     max_retries: int = 1  # failed waves a request survives before ejection
 
@@ -109,162 +118,146 @@ def _bucket_nodes(n: int, buckets: tuple[int, ...], tile: int) -> int:
     return -(-p // tile) * tile
 
 
-def _empty_tile_arrays(cap: int) -> dict:
-    return {
-        "tile_row": np.zeros(0, np.int32),
-        "tile_col": np.zeros(0, np.int32),
-        "rows": np.zeros((0, cap), np.int32),
-        "cols": np.zeros((0, cap), np.int32),
-        "vals": np.zeros((0, cap), np.float32),
-        "nnz_in_tile": np.zeros(0, np.int32),
-    }
-
-
-def _pad_tile_arrays(
-    arrays: dict, row_fill: np.ndarray, col_fill: Optional[np.ndarray], cap: int
-) -> dict:
-    """Append zero-nnz tiles at the given (row, col) coordinates."""
-    n_pad = int(row_fill.shape[0])
-    if n_pad == 0:
-        return arrays
-    if col_fill is None:
-        col_fill = np.zeros(n_pad, np.int32)
-    return {
-        "tile_row": np.concatenate([arrays["tile_row"], row_fill.astype(np.int32)]),
-        "tile_col": np.concatenate([arrays["tile_col"], col_fill.astype(np.int32)]),
-        "rows": np.concatenate([arrays["rows"], np.zeros((n_pad, cap), np.int32)]),
-        "cols": np.concatenate([arrays["cols"], np.zeros((n_pad, cap), np.int32)]),
-        "vals": np.concatenate([arrays["vals"], np.zeros((n_pad, cap), np.float32)]),
-        "nnz_in_tile": np.concatenate(
-            [arrays["nnz_in_tile"], np.zeros(n_pad, np.int32)]
-        ),
-    }
-
-
 def assemble_batched_graph(
-    plans: list[Graph], tile: int, pad_nodes: int
+    plans: list[Graph], tile: int, pad_nodes: int, with_edges: bool = True
 ) -> BatchedGraph:
-    """Fuse prepared per-graph plans into one block-diagonal plan.
+    """Fuse prepared per-graph plans into one block-diagonal ``SCVPlan``.
 
     Each member plan already tiles its (tile-padded) own grid, so the
-    composite is index arithmetic: member i's tile coordinates shift by
-    ``starts[i] // tile`` and its COO rows/cols by ``starts[i]``.  Member
-    coverage dummies stay valid (each composite block-row belongs to
-    exactly one member, so PS block-row contiguity is preserved), and the
-    bucket-padding rows at the tail get fresh zero-nnz coverage tiles so
-    the Pallas kernel defines the whole output.
+    composite is index arithmetic over the members' plan pytrees: member
+    i's tile coordinates shift by ``starts[i] // tile`` and its COO
+    rows/cols by ``starts[i]`` — all of it vectorized numpy (concatenate +
+    broadcast adds), no per-tile Python loop.  Member coverage dummies
+    stay valid (each composite block-row belongs to exactly one member, so
+    PS block-row contiguity is preserved), and the bucket-padding rows at
+    the tail get fresh zero-nnz coverage tiles so the Pallas kernel
+    defines the whole output.
+
+    ``with_edges`` controls the composite COO edge arrays + perm: only
+    GAT's attention reads them, so non-GAT batches skip both the assembly
+    cost and the cache bytes — at the price of a model-kind component in
+    the composite cache key (the engine salts it; see ``_batch_plan``).
     """
     T = tile
     k = len(plans)
-    caps = {g.tiles.cap for g in plans}
+    caps = {g.plan.cap for g in plans}
     if len(caps) > 1:
         raise ValueError(f"member plans disagree on cap: {sorted(caps)}")
-    orders = {g.tiles.order for g in plans}
+    orders = {g.plan.order for g in plans}
     if len(orders) > 1:
         raise ValueError(f"member plans disagree on order: {sorted(orders)}")
     cap = caps.pop() if caps else 8
+    order = orders.pop() if orders else "zmorton"
 
     starts = np.zeros(k + 1, np.int64)
     for i, g in enumerate(plans):
-        if g.tiles.tile != T:
-            raise ValueError(f"member plan tiled at {g.tiles.tile}, engine at {T}")
+        if g.plan.tile != T:
+            raise ValueError(f"member plan tiled at {g.plan.tile}, engine at {T}")
         starts[i + 1] = starts[i] + -(-g.n_nodes // T) * T
     n_aligned = int(starts[-1])
     pad_nodes = -(-max(pad_nodes, n_aligned) // T) * T
     blk_off = starts // T
 
-    # --- composite COO (device edge arrays, used by GAT attention) ---
-    rows = np.concatenate(
-        [np.asarray(g.rows, np.int64) + starts[i] for i, g in enumerate(plans)]
-    ).astype(np.int32) if k else np.zeros(0, np.int32)
-    cols = np.concatenate(
-        [np.asarray(g.cols, np.int64) + starts[i] for i, g in enumerate(plans)]
-    ).astype(np.int32) if k else np.zeros(0, np.int32)
-    vals = np.concatenate(
-        [np.asarray(g.vals) for g in plans]
-    ) if k else np.zeros(0, np.float32)
-
-    # --- composite device tile arrays (coverage dummies included) ---
-    arrays = _empty_tile_arrays(cap)
-    if k:
-        for key in arrays:
-            parts = []
-            for i, g in enumerate(plans):
-                a = np.asarray(g.tile_arrays[key])
-                if key in ("tile_row", "tile_col"):
-                    a = (a.astype(np.int64) + blk_off[i]).astype(np.int32)
-                parts.append(a)
-            arrays[key] = np.concatenate(parts)
-
-    # fresh coverage for the bucket-padding block-rows at the tail: the
-    # Pallas kernel zero-defines a PS strip only when it visits its row
-    arrays = _pad_tile_arrays(
-        arrays,
-        row_fill=np.arange(n_aligned // T, pad_nodes // T, dtype=np.int32),
-        col_fill=None,
-        cap=cap,
-    )
-
-    # --- tile-count bucket: pad nt to the next power of two so jit sees a
-    # bounded set of array shapes across batch compositions.  Padding tiles
-    # carry nnz == 0 and repeat the *last* tile's coordinates: the Pallas
-    # kernel then revisits an already-initialized PS strip (no re-zeroing —
-    # appending a fresh block-row here would wipe real output), and the jnp
-    # reference masks them via nnz_in_tile.
-    nt = int(arrays["tile_row"].shape[0])
+    # --- composite tile arrays: member plan leaves shifted + concatenated,
+    # then two pad blocks: fresh zero-nnz coverage tiles for the bucket-
+    # padding block-rows at the tail (the Pallas kernel zero-defines a PS
+    # strip only when it visits its row), then tile-count padding up to the
+    # next power of two so jit sees a bounded set of array shapes.  The
+    # tile-count padding repeats the *last* tile's coordinates: the kernel
+    # then revisits an already-initialized PS strip (no re-zeroing —
+    # appending a fresh block-row would wipe real output), and the jnp
+    # reference masks the zero-nnz slots via nnz_in_tile.
+    nts = np.array([g.plan.n_tiles for g in plans], np.int64)
+    nt_members = int(nts.sum())
+    n_cov = pad_nodes // T - n_aligned // T  # fresh tail coverage tiles
+    nt = nt_members + n_cov
     nt_bucket = 8
     while nt_bucket < nt:
         nt_bucket *= 2
-    if nt:
-        padn = nt_bucket - nt
-        arrays = _pad_tile_arrays(
-            arrays,
-            row_fill=np.full(padn, arrays["tile_row"][-1], np.int32),
-            col_fill=np.full(padn, arrays["tile_col"][-1], np.int32),
-            cap=cap,
+    # repeat-last-coordinate padding tiles (an empty composite stays empty)
+    n_fill = nt_bucket - nt if nt else 0
+
+    def cat(parts, pad_blocks, dtype):
+        # convert per block BEFORE concatenating: mixing int32 members with
+        # default-float64 pads would promote the whole composite to f64
+        blocks = [np.asarray(p, dtype) for p in parts]
+        blocks += [np.asarray(b, dtype) for b in pad_blocks]
+        return np.concatenate(blocks) if blocks else np.zeros(0, dtype)
+
+    shift = np.repeat(blk_off[:k], nts)  # per-tile block-diagonal offset
+    tile_row = cat(
+        [g.plan.tile_row for g in plans],
+        [np.arange(n_aligned // T, pad_nodes // T, dtype=np.int64)],
+        np.int64,
+    )
+    tile_row[:nt_members] += shift
+    tile_col = cat(
+        [g.plan.tile_col for g in plans], [np.zeros(n_cov, np.int64)], np.int64
+    )
+    tile_col[:nt_members] += shift
+    last_r = tile_row[nt - 1] if nt else 0
+    last_c = tile_col[nt - 1] if nt else 0
+    tile_row = np.concatenate([tile_row, np.full(n_fill, last_r)]).astype(np.int32)
+    tile_col = np.concatenate([tile_col, np.full(n_fill, last_c)]).astype(np.int32)
+
+    n_pad = n_cov + n_fill
+    rows2 = cat([g.plan.rows for g in plans], [np.zeros((n_pad, cap))], np.int32)
+    cols2 = cat([g.plan.cols for g in plans], [np.zeros((n_pad, cap))], np.int32)
+    vals2 = cat([g.plan.vals for g in plans], [np.zeros((n_pad, cap))], np.float32)
+    nnz2 = cat([g.plan.nnz_in_tile for g in plans], [np.zeros(n_pad)], np.int32)
+
+    # --- composite COO edge arrays + perm (GAT re-weighting only) ---
+    if with_edges:
+        for g in plans:
+            if g.rows is None or g.plan.perm is None:
+                raise ValueError(
+                    "with_edges=True needs member plans built with edges/perm"
+                )
+        edge_counts = np.array(
+            [int(np.asarray(g.rows).shape[0]) for g in plans], np.int64
         )
+        entry_off = np.concatenate([[0], np.cumsum(edge_counts)])
+        if entry_off[-1] >= 2**31:  # composite perm is i32
+            raise ValueError(
+                f"composite entry count {entry_off[-1]} overflows the "
+                "int32 perm leaf"
+            )
+        rows = cat([g.rows for g in plans], [], np.int64)
+        cols = cat([g.cols for g in plans], [], np.int64)
+        eshift = np.repeat(starts[:k], edge_counts)
+        rows = (rows + eshift).astype(np.int32)
+        cols = (cols + eshift).astype(np.int32)
+        vals = cat([g.vals for g in plans], [], np.float32)
+        perm = np.full((nt + n_fill, cap), -1, np.int32)
+        if k:
+            pstack = np.concatenate(
+                [np.asarray(g.plan.perm, np.int64) for g in plans]
+            )
+            poff = np.repeat(entry_off[:k], nts)[:, None]
+            perm[:nt_members] = np.where(
+                pstack >= 0, pstack + poff, -1
+            ).astype(np.int32)
+        erows, ecols, evals = jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals)
+        perm_j = jnp.asarray(perm)
+    else:
+        erows = ecols = evals = None
+        perm_j = None
 
-    # --- composite perm (edge -> tile-slot map, for GAT re-weighting) ---
-    entry_off = np.zeros(k + 1, np.int64)
-    for i, g in enumerate(plans):
-        entry_off[i + 1] = entry_off[i] + int(np.asarray(g.rows).shape[0])
-    perm_parts = []
-    for i, g in enumerate(plans):
-        p = np.asarray(g.perm)
-        perm_parts.append(np.where(p >= 0, p + entry_off[i], -1))
-    nt_cov = arrays["tile_row"].shape[0]
-    perm = np.full((nt_cov, cap), -1, np.int64)
-    if perm_parts:
-        stacked = np.concatenate(perm_parts)
-        perm[: stacked.shape[0]] = stacked
-
-    # --- composite SCVTiles: METADATA ONLY (tile / cap / shape / order).
-    # The forward path always routes through Graph.tile_arrays (_agg passes
-    # arrays=), so duplicating the entry arrays here would only double
-    # assembly cost and the bytes charged against the cache budget.
-    meta = _empty_tile_arrays(cap)
-    tiles = SCVTiles(
-        tile_row=meta["tile_row"],
-        tile_col=meta["tile_col"],
-        rows=meta["rows"],
-        cols=meta["cols"],
-        vals=meta["vals"],
-        nnz_in_tile=meta["nnz_in_tile"],
+    plan = SCVPlan(
+        tile_row=jnp.asarray(tile_row),
+        tile_col=jnp.asarray(tile_col),
+        rows=jnp.asarray(rows2),
+        cols=jnp.asarray(cols2),
+        vals=jnp.asarray(vals2),
+        nnz_in_tile=jnp.asarray(nnz2),
+        perm=perm_j,
         tile=T,
         cap=cap,
         shape=(pad_nodes, pad_nodes),
-        order=orders.pop() if orders else "zmorton",
-        perm=None,
+        order=order,
     )
-
     graph = Graph(
-        n_nodes=pad_nodes,
-        rows=jnp.asarray(rows),
-        cols=jnp.asarray(cols),
-        vals=jnp.asarray(vals),
-        tiles=tiles,
-        tile_arrays={kk: jnp.asarray(v) for kk, v in arrays.items()},
-        perm=jnp.asarray(perm),
+        n_nodes=pad_nodes, plan=plan, rows=erows, cols=ecols, vals=evals
     )
     return BatchedGraph(
         graph=graph,
@@ -293,7 +286,9 @@ class GraphServeEngine:
         self.models = models
         self.cfg = cfg = cfg if cfg is not None else GraphEngineConfig()
         self.plan_cache = PlanCache(
-            max_entries=cfg.cache_entries, max_bytes=cfg.cache_bytes
+            max_entries=cfg.cache_entries,
+            max_bytes=cfg.cache_bytes,
+            max_age_s=cfg.plan_ttl_s,
         )
         self.queue: list[GraphRequest] = []
         # bounded: a serving process runs forever; retaining every request
@@ -373,12 +368,24 @@ class GraphServeEngine:
         """Composite plan for a batch.  The composite key is derived from
         content hashes alone, so a hot batch is resolved before any member
         plan is touched — member plans are fetched/built only on a
-        composite miss (inside the builder)."""
+        composite miss (inside the builder).
+
+        The composite COO edge arrays + perm are assembled lazily: only
+        GAT reads them, so the salt carries an ``edges`` component — the
+        model-*kind* (edge-needing or not), deliberately not the model
+        name, so same-kind models still share composite plans.  Member
+        plans always carry edges (one representation serves every kind)
+        and stay kind-agnostic."""
         T, cap = self.cfg.tile, self.cfg.cap
+        _, mcfg = self.models[batch[0].model]
+        with_edges = mcfg.kind == "gat"
         member_keys = [coo_content_key(r.adj, tile=T, cap=cap) for r in batch]
         aligned = sum(-(-r.adj.shape[0] // T) * T for r in batch)
         bucket = _bucket_nodes(aligned, self.cfg.node_buckets, T)
-        ckey = combine_keys(member_keys, salt=f"batch;bucket={bucket};tile={T};")
+        ckey = combine_keys(
+            member_keys,
+            salt=f"batch;bucket={bucket};tile={T};edges={int(with_edges)};",
+        )
 
         def build() -> BatchedGraph:
             plans = [
@@ -387,7 +394,7 @@ class GraphServeEngine:
                 )
                 for k, r in zip(member_keys, batch)
             ]
-            return assemble_batched_graph(plans, T, bucket)
+            return assemble_batched_graph(plans, T, bucket, with_edges=with_edges)
 
         return self.plan_cache.get_or_build(ckey, build)
 
@@ -457,6 +464,7 @@ class GraphServeEngine:
             "plan_cache_hits": s.hits,
             "plan_cache_misses": s.misses,
             "plan_cache_evictions": s.evictions,
+            "plan_cache_expired": s.expired,
             "plan_cache_bytes": s.bytes_in_use,
             "plan_cache_entries": s.entries,
             "plan_cache_hit_rate": s.hit_rate,

@@ -21,8 +21,16 @@ Design:
   either the entry-count or the byte budget is exceeded.  Bytes are
   accounted from the device/host arrays actually held by the plan.
 
-* **Counters** — hits / misses / evictions / bytes for the serving metrics
-  endpoint and the benchmark's hit-rate report.
+* **TTL / refresh** — with ``max_age_s`` set, an entry older than the TTL
+  is treated as a miss on lookup (dropped and counted in
+  ``stats.expired``), so ``get_or_build`` transparently rebuilds it — the
+  refresh policy for serving processes whose graph contents drift under a
+  stable content key is "expire and rebuild on next touch".  The clock is
+  injected (defaults to ``time.monotonic``) so policies are testable
+  without sleeping.
+
+* **Counters** — hits / misses / evictions / expirations / bytes for the
+  serving metrics endpoint and the benchmark's hit-rate report.
 
 The cache is deliberately value-agnostic: ``get_or_build`` takes a builder
 callback, so the engine caches single-graph plans and composite batch
@@ -116,6 +124,7 @@ class PlanCacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    expired: int = 0  # TTL drops (also counted as misses on lookup)
     bytes_in_use: int = 0
     entries: int = 0
     build_seconds: float = 0.0
@@ -130,22 +139,34 @@ class PlanCacheStats:
 class _Entry:
     value: Any
     nbytes: int
+    created: float = 0.0  # clock() at insertion (TTL anchor)
 
 
 class PlanCache:
-    """Content-addressed LRU cache of prepared aggregation plans."""
+    """Content-addressed LRU cache of prepared aggregation plans.
+
+    ``max_age_s`` (optional) bounds entry staleness: lookups drop entries
+    older than the TTL and report a miss, so hot keys are rebuilt in place.
+    ``clock`` is injectable for tests (monotonic seconds).
+    """
 
     def __init__(
         self,
         max_entries: int = 256,
         max_bytes: int = 512 * 1024 * 1024,
+        max_age_s: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
     ):
         if max_entries <= 0:
             raise ValueError("max_entries must be positive")
         if max_bytes <= 0:
             raise ValueError("max_bytes must be positive")
+        if max_age_s is not None and max_age_s <= 0:
+            raise ValueError("max_age_s must be positive (or None to disable)")
         self.max_entries = max_entries
         self.max_bytes = max_bytes
+        self.max_age_s = max_age_s
+        self._clock = clock
         self._entries: OrderedDict[str, _Entry] = OrderedDict()
         self.stats = PlanCacheStats()
         self._build_depth = 0  # nested get_or_build (composite -> members)
@@ -154,16 +175,31 @@ class PlanCache:
         return len(self._entries)
 
     def __contains__(self, key: str) -> bool:
-        return key in self._entries
+        return self._live_entry(key) is not None
 
     @property
     def keys(self) -> list[str]:
         """Keys in LRU order (least-recently-used first)."""
         return list(self._entries)
 
-    def get(self, key: str) -> Optional[Any]:
-        """Look up a plan; counts a hit/miss and refreshes recency."""
+    def _live_entry(self, key: str) -> Optional[_Entry]:
+        """Entry for ``key`` if present and within TTL; expired entries are
+        dropped (counted in ``stats.expired``) and reported absent."""
         e = self._entries.get(key)
+        if e is None:
+            return None
+        if self.max_age_s is not None and self._clock() - e.created > self.max_age_s:
+            self._entries.pop(key)
+            self.stats.bytes_in_use -= e.nbytes
+            self.stats.expired += 1
+            self.stats.entries = len(self._entries)
+            return None
+        return e
+
+    def get(self, key: str) -> Optional[Any]:
+        """Look up a plan; counts a hit/miss and refreshes recency.
+        An entry past ``max_age_s`` counts as a miss (and is dropped)."""
+        e = self._live_entry(key)
         if e is None:
             self.stats.misses += 1
             return None
@@ -172,8 +208,9 @@ class PlanCache:
         return e.value
 
     def peek(self, key: str) -> Optional[Any]:
-        """Look up without touching recency or counters (introspection)."""
-        e = self._entries.get(key)
+        """Look up without touching recency or hit/miss counters
+        (introspection); still drops entries past the TTL."""
+        e = self._live_entry(key)
         return e.value if e is not None else None
 
     def put(self, key: str, value: Any, nbytes: Optional[int] = None) -> None:
@@ -187,7 +224,7 @@ class PlanCache:
             # way in and then be evicted itself — skip it instead
             self.stats.entries = len(self._entries)
             return
-        self._entries[key] = _Entry(value, int(nbytes))
+        self._entries[key] = _Entry(value, int(nbytes), created=self._clock())
         self.stats.bytes_in_use += int(nbytes)
         self._evict()
         self.stats.entries = len(self._entries)

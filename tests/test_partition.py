@@ -71,6 +71,52 @@ def test_sharded_aggregation_equals_full():
     np.testing.assert_allclose(acc, full, atol=1e-4)
 
 
+def test_shard_plan_matches_shard_tiles():
+    """Sharding the device plan pytree == sharding the host tiles object:
+    same spans, same padded layout, same per-part aggregation sum."""
+    import dataclasses
+
+    from repro.core import plan_from_tiles, shard_plan
+    from repro.core.aggregate import aggregate_scv_plan
+
+    rng = np.random.default_rng(7)
+    a = ((rng.random((96, 96)) < 0.06) * rng.standard_normal((96, 96))).astype(
+        np.float32
+    )
+    tiles = coo_to_scv_tiles(coo_from_dense(a), 16)
+    plan = plan_from_tiles(tiles, ensure_coverage=False)
+    part = split_equal_nnz(plan, 4)
+    stacked_t = shard_tiles(tiles, part)
+    stacked_p = shard_plan(plan, part)
+    for f in ("tile_row", "tile_col", "rows", "cols", "vals", "nnz_in_tile"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(stacked_p, f)), getattr(stacked_t, f)
+        )
+    # padded slots of the perm leaf are -1 (no source entry)
+    pad = part.part_tiles.ravel() < 0
+    if pad.any():
+        assert (np.asarray(stacked_p.perm)[pad] == -1).all()
+    # per-part aggregation sums to the full result
+    z = jnp.asarray(rng.standard_normal((96, 8)).astype(np.float32))
+    full = np.asarray(aggregate_scv_plan(plan, z, backend="jnp"))
+    width = part.part_tiles.shape[1]
+    acc = np.zeros_like(full)
+    for p in range(4):
+        sl = slice(p * width, (p + 1) * width)
+        sub = dataclasses.replace(
+            stacked_p,
+            tile_row=stacked_p.tile_row[sl],
+            tile_col=stacked_p.tile_col[sl],
+            rows=stacked_p.rows[sl],
+            cols=stacked_p.cols[sl],
+            vals=stacked_p.vals[sl],
+            nnz_in_tile=stacked_p.nnz_in_tile[sl],
+            perm=stacked_p.perm[sl],
+        )
+        acc += np.asarray(aggregate_scv_plan(sub, z, backend="jnp"))
+    np.testing.assert_allclose(acc, full, atol=1e-4)
+
+
 def test_zorder_spans_preserve_locality():
     """Contiguous Z-curve spans touch fewer distinct tile rows+cols than
     random same-size subsets (the paper's locality claim)."""

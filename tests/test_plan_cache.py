@@ -141,6 +141,69 @@ def test_invalid_budgets_rejected():
         PlanCache(max_entries=0)
     with pytest.raises(ValueError):
         PlanCache(max_bytes=0)
+    with pytest.raises(ValueError):
+        PlanCache(max_age_s=0)
+
+
+# ---------------------------------------------------------------------------
+# TTL / refresh policy (injected clock — no sleeping)
+# ---------------------------------------------------------------------------
+class _FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+
+def test_ttl_expires_entries_and_counts():
+    clk = _FakeClock()
+    c = PlanCache(max_entries=4, max_age_s=10.0, clock=clk)
+    c.put("a", 1, nbytes=5)
+    clk.now = 9.0
+    assert c.get("a") == 1  # still fresh
+    clk.now = 10.5
+    assert c.get("a") is None  # expired -> miss
+    assert c.stats.expired == 1
+    assert (c.stats.hits, c.stats.misses) == (1, 1)
+    assert c.stats.bytes_in_use == 0 and len(c) == 0
+
+
+def test_ttl_get_or_build_refreshes():
+    clk = _FakeClock()
+    c = PlanCache(max_entries=4, max_age_s=5.0, clock=clk)
+    builds = []
+    for t in (0.0, 3.0, 6.0):  # 6.0 is > 5s after the t=0 build
+        clk.now = t
+        v = c.get_or_build("k", lambda: builds.append(clk.now) or clk.now, nbytes=1)
+        assert v == builds[-1]
+    assert builds == [0.0, 6.0]  # rebuilt exactly once, on expiry
+    assert c.stats.expired == 1
+    # the refreshed entry's TTL anchors at its rebuild time
+    clk.now = 10.0
+    assert c.get("k") == 6.0
+
+
+def test_ttl_contains_and_peek_are_expiry_aware():
+    clk = _FakeClock()
+    c = PlanCache(max_entries=4, max_age_s=1.0, clock=clk)
+    c.put("a", 1, nbytes=5)
+    assert "a" in c and c.peek("a") == 1
+    hits, misses = c.stats.hits, c.stats.misses
+    clk.now = 2.0
+    assert "a" not in c
+    assert c.peek("a") is None
+    # peek/contains never touch hit/miss counters
+    assert (c.stats.hits, c.stats.misses) == (hits, misses)
+    assert c.stats.expired >= 1
+
+
+def test_no_ttl_entries_never_expire():
+    clk = _FakeClock()
+    c = PlanCache(max_entries=4, clock=clk)
+    c.put("a", 1, nbytes=5)
+    clk.now = 1e12
+    assert c.get("a") == 1 and c.stats.expired == 0
 
 
 # ---------------------------------------------------------------------------
@@ -151,8 +214,8 @@ def test_plan_nbytes_walks_real_graph_bundle():
 
     g = build_graph(_coo(0), tile=64, backend_cap=16)
     nb = plan_nbytes(g)
-    # at least the tile value array and the perm must be counted
-    assert nb >= g.tiles.vals.nbytes + np.asarray(g.perm).nbytes
+    # at least the plan's tile value array and its perm must be counted
+    assert nb >= g.plan.vals.nbytes + np.asarray(g.plan.perm).nbytes
 
 
 def test_plan_nbytes_dedupes_shared_arrays():
