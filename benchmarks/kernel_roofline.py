@@ -18,25 +18,46 @@ cheaper on the MXU than on the VPU gather-FMA path when
   T*T*F / MXU_rate  <  nnz * F / VPU_rate   =>   nnz > T^2 * VPU/MXU
 
 (v5e: MXU 16384 MAC/cycle, VPU 1024 FMA-lane/cycle => nnz > T^2/16).
+The threshold and the capacity-bucket ladder are imported from
+``core.scv`` — the same constants the Pallas kernel executes with
+(``dense_tile_threshold``, ``bucket_caps_for``) — so this model cannot
+drift from the implementation.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import coo_to_scv_tiles
-from repro.core.scv import ROW_MAJOR, ZMORTON
+from repro.core.scv import (
+    MXU_VPU_RATIO,
+    ROW_MAJOR,
+    ZMORTON,
+    bucket_caps_for,
+    dense_tile_threshold,
+)
 from repro.simul.datasets import gcn_normalize, load, powerlaw_graph
 
 HBM_BW = 819e9
 PEAK = 197e12
 MXU_RATE = 128 * 128  # MACs/cycle
-VPU_RATE = 8 * 128  # FMA lanes/cycle
+VPU_RATE = int(MXU_RATE * MXU_VPU_RATIO)  # FMA lanes/cycle (8 * 128 on v5e)
 
 
 def kernel_traffic(tiles, f: int, vmem_mb: float = 16.0):
-    """Returns dict of byte/flop terms for one aggregation pass."""
+    """Returns dict of byte/flop terms for one aggregation pass.
+
+    ``a_bytes`` is reported for both capacity layouts: the single global
+    cap every tile pads to, and the nnz-bucketed ladder the kernel
+    actually runs (``core.scv.bucket_caps_for`` — per-bucket segments,
+    per-segment cap)."""
     T, cap, nt = tiles.tile, tiles.cap, tiles.n_tiles
     a_bytes = nt * cap * (4 + 4 + 4)  # vals + rows + cols (padded, static)
+    caps = bucket_caps_for(tiles.nnz_in_tile, T)
+    # per-bucket tile counts without materializing the bucketed arrays
+    per_bucket = np.bincount(
+        np.searchsorted(caps, tiles.nnz_in_tile), minlength=len(caps)
+    )
+    a_bytes_bucketed = int((per_bucket * np.asarray(caps)).sum()) * (4 + 4 + 4)
     z_block = T * f * 4
     # Pallas skips the Z copy when the next tile's index map is unchanged;
     # beyond that, a VMEM-window model: a Z block is re-fetched only if not
@@ -55,17 +76,20 @@ def kernel_traffic(tiles, f: int, vmem_mb: float = 16.0):
     flops = 2.0 * tiles.nnz * f
     return {
         "a_bytes": a_bytes, "z_bytes": z_bytes, "ps_bytes": ps_bytes,
+        "a_bytes_bucketed": a_bytes_bucketed, "bucket_caps": caps,
         "total_bytes": a_bytes + z_bytes + ps_bytes,
+        "total_bytes_bucketed": a_bytes_bucketed + z_bytes + ps_bytes,
         "flops": flops, "n_tiles": nt, "cap": cap,
         "pad_frac": tiles.padding_fraction,
     }
 
 
 def hybrid_split(tiles, f: int):
-    """Beyond-paper: send dense-ish tiles to the MXU.  Density is judged
-    on LOGICAL tiles (cap-splitting merged back), since the MXU would
-    consume the whole T x T tile at once.  Returns (cycles before, cycles
-    after, fraction densified)."""
+    """Send dense-ish tiles to the MXU — the rule the kernel implements
+    in-kernel (``nnz > core.scv.dense_tile_threshold(T)``; densify + one
+    plain matmul).  Density is judged on LOGICAL tiles (cap-splitting
+    merged back), since the MXU would consume the whole T x T tile at
+    once.  Returns (cycles before, cycles after, fraction densified)."""
     T = tiles.tile
     key = tiles.tile_row.astype(np.int64) * (2**32) + tiles.tile_col
     uniq, inv = np.unique(key, return_inverse=True)
@@ -73,15 +97,16 @@ def hybrid_split(tiles, f: int):
     np.add.at(nnz, inv, tiles.nnz_in_tile.astype(np.int64))
     vpu_cycles = nnz * f / VPU_RATE
     mxu_cycles = (T * T * f) / MXU_RATE * np.ones(len(uniq), dtype=float)
+    dense = nnz > dense_tile_threshold(T)  # == mxu_cycles < vpu_cycles
     before = float(vpu_cycles.sum())
-    after = float(np.minimum(vpu_cycles, mxu_cycles).sum())
-    dense_frac = float((mxu_cycles < vpu_cycles).mean())
+    after = float(np.where(dense, mxu_cycles, vpu_cycles).sum())
+    dense_frac = float(dense.mean())
     return before, after, dense_frac
 
 
 def main():
     rows = []
-    print("dataset       T    cap   bytes(GB) AI(fl/B) t_mem(ms) pad%  | hybrid: VPU-cyc  mix-cyc  dense%")
+    print("dataset       T    cap   bytes(GB) bkt(GB) AI(fl/B) t_mem(ms) pad%  | hybrid: VPU-cyc  mix-cyc  dense%")
     for name in ["arxiv", "cobuy_photo", "proteins"]:
         g = load(name, max_edges=250_000)
         f = 128
@@ -95,6 +120,7 @@ def main():
                        vpu_cycles=b4, hybrid_cycles=aft, dense_frac=dfrac)
             rows.append(row)
             print(f"{name:12s} {T:4d} {k['cap']:5d} {k['total_bytes']/1e9:9.3f} "
+                  f"{k['total_bytes_bucketed']/1e9:7.3f} "
                   f"{k['flops']/k['total_bytes']:8.2f} {t_mem:8.3f} "
                   f"{100*k['pad_frac']:4.0f}  | {b4:12.0f} {aft:8.0f} {100*dfrac:5.1f}%")
             if best is None or k["total_bytes"] < best[1]:

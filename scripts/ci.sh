@@ -10,7 +10,11 @@
 #     the default suite; re-run explicitly only when "$@" filters might
 #     have deselected them, and
 #   * benchmarks/preprocess_bench.py (vectorized SCV tile construction
-#     >= 5x the scalar loop on a 1M-edge graph; emits BENCH_preprocess.json).
+#     >= 5x the scalar loop on a 1M-edge graph; emits BENCH_preprocess.json),
+#   * benchmarks/kernel_bench.py (vectorized/bucketed Pallas kernel body
+#     >= 3x the scalar-loop kernel at 1M edges on a power-law graph,
+#     interpret mode, bit-exact vs the jnp reference; emits
+#     BENCH_kernel.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -19,3 +23,4 @@ if [ "$#" -gt 0 ]; then
   python -m pytest -q tests/test_scv_plan.py -k "jit" --no-header
 fi
 python benchmarks/preprocess_bench.py
+python benchmarks/kernel_bench.py

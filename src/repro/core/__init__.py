@@ -32,15 +32,22 @@ from repro.core.partition import (
     split_equal_nnz,
 )
 from repro.core.scv import (
+    MXU_VPU_RATIO,
     ROW_MAJOR,
     ZMORTON,
+    SCVBucketedPlan,
     SCVMatrix,
     SCVPlan,
     SCVTiles,
+    bucket_caps_for,
+    bucket_tiles,
     coo_to_scv,
     coo_to_scv_tiles,
+    dense_tile_threshold,
     plan_from_tiles,
+    plan_from_tiles_bucketed,
     scv_to_tiles,
+    tile_nnz_histogram,
 )
 
 __all__ = [k for k in dir() if not k.startswith("_")]

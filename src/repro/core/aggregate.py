@@ -15,6 +15,9 @@ This is the framework's first-class entry point for the paper's technique.
                                       static aux, so the call (and any
                                       caller up to the whole GNN forward)
                                       sits under a single ``jax.jit``
+* ``SCVBucketedPlan``               — nnz-bucketed plan: one kernel launch
+                                      per capacity segment, partial outputs
+                                      summed (no global-max cap padding)
 
 All backends are numerically equivalent (validated by property tests).
 ``aggregate_scv_plan`` is the jit-native entry point; the legacy
@@ -31,7 +34,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import BCSRMatrix, COOMatrix, CSCMatrix, CSRMatrix
-from repro.core.scv import SCVMatrix, SCVPlan, SCVTiles, plan_from_tiles, scv_to_tiles
+from repro.core.scv import (
+    SCVBucketedPlan,
+    SCVMatrix,
+    SCVPlan,
+    SCVTiles,
+    plan_from_tiles,
+    scv_to_tiles,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -148,19 +158,22 @@ def aggregate_scv_tiles(
 
 
 def aggregate_scv_plan(
-    p: SCVPlan,
+    p: Union[SCVPlan, SCVBucketedPlan],
     z: jnp.ndarray,
     *,
     backend: str = "auto",
     feature_block: int = 128,
 ) -> jnp.ndarray:
-    """SCV aggregation over a :class:`SCVPlan` pytree — the jit-native path.
+    """SCV aggregation over a plan pytree — the jit-native path.
 
-    Every array the computation reads is a pytree leaf of ``p`` and every
-    piece of static configuration (tile, padded row count, backend
-    selection) comes from the plan's aux data, so this function — and any
-    caller threading plans around, up to ``models.gnn.gnn_forward`` — can
-    sit under one outer ``jax.jit`` with zero host round-trips per layer.
+    Accepts both the single-cap :class:`SCVPlan` and the nnz-bucketed
+    :class:`SCVBucketedPlan` (one kernel launch per capacity segment,
+    partial outputs summed).  Every array the computation reads is a
+    pytree leaf of ``p`` and every piece of static configuration (tile,
+    padded row count, bucket ladder, backend selection) comes from the
+    plan's aux data, so this function — and any caller threading plans
+    around, up to ``models.gnn.gnn_forward`` — can sit under one outer
+    ``jax.jit`` with zero host round-trips per layer.
     """
     from repro.kernels.scv_spmm import ops as scv_ops  # local import: keep core light
     from repro.kernels.scv_spmm import ref as scv_ref
@@ -168,11 +181,7 @@ def aggregate_scv_plan(
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if backend == "jnp":
-        out = scv_ref.scv_spmm_reference(
-            p.tile_row, p.tile_col, p.rows, p.cols, p.vals,
-            z, tile=p.tile, n_rows=p.padded_shape[0],
-            nnz_in_tile=p.nnz_in_tile,
-        )
+        out = scv_ref.scv_spmm_reference_plan(p, z)
     elif backend in ("pallas", "pallas_interpret"):
         out = scv_ops.scv_spmm_plan(
             p, z, feature_block=feature_block,
@@ -186,7 +195,7 @@ def aggregate_scv_plan(
 # ---------------------------------------------------------------------------
 # dispatch
 # ---------------------------------------------------------------------------
-Format = Union[np.ndarray, jnp.ndarray, COOMatrix, CSRMatrix, CSCMatrix, BCSRMatrix, SCVMatrix, SCVTiles, SCVPlan]
+Format = Union[np.ndarray, jnp.ndarray, COOMatrix, CSRMatrix, CSCMatrix, BCSRMatrix, SCVMatrix, SCVTiles, SCVPlan, SCVBucketedPlan]
 
 
 def aggregate(a: Format, z: jnp.ndarray, **kw: Any) -> jnp.ndarray:
@@ -212,7 +221,7 @@ def aggregate(a: Format, z: jnp.ndarray, **kw: Any) -> jnp.ndarray:
         return aggregate_scv_tiles(scv_to_tiles(a), z, **kw)
     if isinstance(a, SCVTiles):
         return aggregate_scv_tiles(a, z, **kw)
-    if isinstance(a, SCVPlan):
+    if isinstance(a, (SCVPlan, SCVBucketedPlan)):
         return aggregate_scv_plan(a, z, **kw)
     raise TypeError(f"unsupported adjacency format: {type(a)}")
 

@@ -46,6 +46,14 @@ def distribute_plan(plan: SCVPlan, n_parts: int) -> DistributedGraph:
     The span gather happens on device (``partition.shard_plan``); only the
     span boundaries are computed host-side from the nnz histogram.
     """
+    from repro.core.scv import SCVBucketedPlan
+
+    if isinstance(plan, SCVBucketedPlan):
+        raise TypeError(
+            "distribute_plan takes a single-cap SCVPlan; bucketed plans "
+            "shard per segment (core.partition.split_equal_nnz/shard_plan) "
+            "but the shard_map wiring for them is not built yet (ROADMAP)"
+        )
     part = split_equal_nnz(plan, n_parts)
     stacked = shard_plan(plan, part)
     width = part.part_tiles.shape[1]

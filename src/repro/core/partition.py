@@ -29,7 +29,7 @@ from typing import Union
 
 import numpy as np
 
-from repro.core.scv import SCVPlan, SCVTiles
+from repro.core.scv import SCVBucketedPlan, SCVPlan, SCVTiles
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,11 +42,18 @@ class Partition:
     n_parts: int
 
 
-def split_equal_nnz(tiles: Union[SCVTiles, SCVPlan], n_parts: int) -> Partition:
+def split_equal_nnz(
+    tiles: Union[SCVTiles, SCVPlan, SCVBucketedPlan], n_parts: int
+) -> Union[Partition, tuple[Partition, ...]]:
     """Greedy prefix split of the (already Z-ordered) tile sequence into
     spans of ~equal nnz.  Never reorders tiles — locality of the curve is
     exactly what the paper relies on.  Accepts the host ``SCVTiles`` or a
-    device ``SCVPlan`` (its ``nnz_in_tile`` leaf is read back once)."""
+    device ``SCVPlan`` (its ``nnz_in_tile`` leaf is read back once).  An
+    nnz-bucketed plan partitions per capacity segment (one ``Partition``
+    each — segments are separate kernel launches, so each is cut into its
+    own equal-nnz spans along the same curve)."""
+    if isinstance(tiles, SCVBucketedPlan):
+        return tuple(split_equal_nnz(s, n_parts) for s in tiles.segments)
     nnz = np.asarray(tiles.nnz_in_tile).astype(np.int64)
     total = int(nnz.sum())
     target = total / max(n_parts, 1)
@@ -100,9 +107,16 @@ def shard_tiles(tiles: SCVTiles, part: Partition) -> SCVTiles:
     )
 
 
-def shard_plan(plan: SCVPlan, part: Partition) -> SCVPlan:
+def shard_plan(
+    plan: Union[SCVPlan, SCVBucketedPlan],
+    part: Union[Partition, tuple[Partition, ...]],
+) -> Union[SCVPlan, SCVBucketedPlan]:
     """Shard the plan *pytree*: gather each part's tile span out of the
     device arrays (part-padded slots become zero tiles, perm slots ``-1``).
+
+    A bucketed plan shards segment-by-segment with the matching tuple of
+    partitions from :func:`split_equal_nnz`; the result is again a
+    bucketed plan whose per-segment leaves carry the stacked span copies.
 
     The result is still one ``SCVPlan`` whose leaves have leading dim
     ``P * tiles_per_part`` — reshape to ``(P, tiles_per_part, ...)`` for
@@ -110,6 +124,15 @@ def shard_plan(plan: SCVPlan, part: Partition) -> SCVPlan:
     gather runs on device; the host only computes the index vector, so the
     tiles never round-trip back to numpy the way ``shard_tiles`` requires.
     """
+    if isinstance(plan, SCVBucketedPlan):
+        if not isinstance(part, tuple) or len(part) != len(plan.segments):
+            raise ValueError(
+                "bucketed plan needs one Partition per segment "
+                f"({len(plan.segments)}), got {part!r}"
+            )
+        return SCVBucketedPlan(
+            tuple(shard_plan(s, p) for s, p in zip(plan.segments, part))
+        )
     import jax.numpy as jnp
 
     idx = part.part_tiles.ravel()
@@ -136,8 +159,14 @@ def shard_plan(plan: SCVPlan, part: Partition) -> SCVPlan:
     )
 
 
-def load_imbalance(part: Partition) -> float:
+def load_imbalance(part: Union[Partition, tuple[Partition, ...]]) -> float:
     """max/mean nnz ratio — 1.0 is perfect balance.  The paper's fine-grain
-    claim is that this stays near 1 even for power-law graphs."""
+    claim is that this stays near 1 even for power-law graphs.  For a
+    bucketed plan's partition tuple the per-part nnz is summed across
+    segments (all segments of one part run on the same device)."""
+    if isinstance(part, tuple):
+        per_part = sum(p.nnz_per_part for p in part)
+        mean = per_part.mean() if len(per_part) else 0.0
+        return float(per_part.max() / mean) if mean else 1.0
     mean = part.nnz_per_part.mean() if part.n_parts else 0.0
     return float(part.nnz_per_part.max() / mean) if mean else 1.0

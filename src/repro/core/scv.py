@@ -24,6 +24,11 @@ Two representations are provided:
   **static aux data**, so jit specializes on them (and on leaf shapes)
   exactly once per padding bucket.
 
+* :class:`SCVBucketedPlan` — the nnz-bucketed variant (DESIGN.md §2): one
+  ``SCVPlan`` segment per entry-capacity bucket so a single hub tile no
+  longer sets the padded capacity of every tile; the kernel runs one
+  launch per segment and sums the partials.
+
 Construction is host-side preprocessing ("statically generated from the COO
 format ... nearly equivalent to creating a CSR or CSC matrix" — §III-C);
 ``coo_to_scv_tiles`` emits tiles with vectorized numpy scatter, so the cost
@@ -43,6 +48,68 @@ from repro.core.formats import COOMatrix
 
 ROW_MAJOR = "row_major"
 ZMORTON = "zmorton"
+
+# ---------------------------------------------------------------------------
+# Kernel-model constants (DESIGN.md §2) — the single source of truth shared
+# by the Pallas kernel (`kernels/scv_spmm`), the hybrid split below, and the
+# roofline model (`benchmarks/kernel_roofline.py` imports these so the model
+# and the implementation cannot drift).
+# ---------------------------------------------------------------------------
+#: VPU FMA-lane rate over MXU MAC rate (v5e: 8x128 lanes vs 128x128 MACs).
+MXU_VPU_RATIO = 1.0 / 16.0
+#: Entries per vectorized kernel chunk (one scatter/gather matmul pair).
+DEFAULT_CHUNK = 128
+#: Geometric ratio between adjacent capacity buckets.
+BUCKET_RATIO = 4
+#: Maximum number of capacity buckets a plan is split into.
+MAX_BUCKETS = 4
+#: Smallest per-tile entry capacity (TPU sublane count).
+MIN_BUCKET_CAP = 8
+
+
+def dense_tile_threshold(tile: int) -> int:
+    """nnz above which a T x T tile is cheaper as a dense MXU matmul than
+    as per-entry gather-FMA work on the VPU:
+
+        T*T*F / MXU_rate < nnz * F / VPU_rate  =>  nnz > T^2 * VPU/MXU
+    """
+    return int(tile * tile * MXU_VPU_RATIO)
+
+
+def bucket_caps_for(
+    counts: np.ndarray,
+    tile: int,
+    max_buckets: int = MAX_BUCKETS,
+    ratio: int = BUCKET_RATIO,
+) -> tuple[int, ...]:
+    """Ascending power-of-two capacity ladder covering ``counts``.
+
+    The largest cap is the smallest power of two holding the heaviest tile
+    (clamped to T^2 — a tile cannot exceed its dense size); smaller caps
+    descend geometrically by ``ratio`` down to ``MIN_BUCKET_CAP``.  The
+    ladder is a pure function of (max count, tile), so two graphs with
+    similar hub sizes share plan aux — and therefore jit traces.
+    """
+    hi = int(counts.max()) if len(counts) else 1
+    hi = max(MIN_BUCKET_CAP, min(hi, tile * tile))
+    cap = MIN_BUCKET_CAP
+    while cap < hi:
+        cap *= 2
+    caps = [cap]
+    while len(caps) < max_buckets and caps[-1] // ratio >= MIN_BUCKET_CAP:
+        caps.append(caps[-1] // ratio)
+    return tuple(sorted(caps))
+
+
+def tile_nnz_histogram(a: COOMatrix, tile: int) -> np.ndarray:
+    """Per-logical-tile entry counts — the input to ``bucket_caps_for``
+    when deriving a ladder *before* tiles are built (chain-splitting at
+    the ladder's largest cap needs the ladder first)."""
+    T = int(tile)
+    nbc = -(-a.shape[1] // T)
+    key = (a.rows // T).astype(np.int64) * nbc + (a.cols // T)
+    _, counts = np.unique(key, return_counts=True)
+    return counts
 
 
 # ---------------------------------------------------------------------------
@@ -478,6 +545,20 @@ class SCVPlan:
         """Same plan, re-weighted entry values (GAT's per-edge attention)."""
         return dataclasses.replace(self, vals=vals)
 
+    def reweighted(self, edge_vals) -> "SCVPlan":
+        """Same plan, tile values re-gathered from a per-edge array through
+        the ``perm`` leaf (GAT's attention weights).  Padding slots carry
+        ``perm == -1`` and gather the appended zero."""
+        if self.perm is None:
+            raise ValueError(
+                "per-edge re-weighting needs the plan's perm leaf; this plan "
+                "was built without it (with_edges/with_perm disabled)"
+            )
+        import jax.numpy as jnp
+
+        ev = jnp.concatenate([edge_vals, jnp.zeros((1,), edge_vals.dtype)])
+        return self.with_vals(ev[self.perm].astype(self.vals.dtype))
+
 
 def plan_from_tiles(
     t: SCVTiles, ensure_coverage: bool = True, with_perm: bool = True
@@ -525,6 +606,163 @@ def plan_from_tiles(
 
 
 # ---------------------------------------------------------------------------
+# nnz-bucketed capacity (DESIGN.md §2): per-bucket segments, per-segment cap
+# ---------------------------------------------------------------------------
+def bucket_tiles(t: SCVTiles, caps) -> tuple[SCVTiles, ...]:
+    """Split tiles into capacity buckets: each tile goes to the smallest
+    ``cap`` holding its nnz, and the entry arrays are truncated to that cap
+    (entries are front-packed, so the truncation drops only structural
+    padding).  One ``SCVTiles`` per cap, tiles in original schedule order —
+    a subsequence of a block-row-grouped schedule keeps equal block-rows
+    consecutive, so the kernel's PS-reuse invariant holds per bucket.
+    """
+    caps = tuple(sorted(int(c) for c in caps))
+    if len(set(caps)) != len(caps) or not caps:
+        raise ValueError(f"caps must be non-empty and distinct, got {caps}")
+    nnz = t.nnz_in_tile.astype(np.int64)
+    if len(nnz) and int(nnz.max()) > caps[-1]:
+        raise ValueError(
+            f"heaviest tile has {int(nnz.max())} entries > largest bucket "
+            f"cap {caps[-1]}; build tiles with cap <= caps[-1] first"
+        )
+    which = np.searchsorted(caps, nnz)  # nnz == cap lands in that bucket
+
+    def fit(a: np.ndarray, cap: int, fill) -> np.ndarray:
+        """Truncate (or, for ladder caps above the build cap, pad) the
+        entry axis to ``cap`` — truncation drops only structural padding
+        because entries are front-packed."""
+        if a.shape[1] >= cap:
+            return a[:, :cap]
+        out = np.full((a.shape[0], cap), fill, a.dtype)
+        out[:, : a.shape[1]] = a
+        return out
+
+    def subset(mask: np.ndarray, cap: int) -> SCVTiles:
+        return SCVTiles(
+            tile_row=t.tile_row[mask],
+            tile_col=t.tile_col[mask],
+            rows=fit(t.rows[mask], cap, 0),
+            cols=fit(t.cols[mask], cap, 0),
+            vals=fit(t.vals[mask], cap, 0),
+            nnz_in_tile=t.nnz_in_tile[mask],
+            tile=t.tile,
+            cap=cap,
+            shape=t.shape,
+            order=t.order,
+            perm=fit(t.perm[mask], cap, -1) if t.perm is not None else None,
+        )
+
+    return tuple(subset(which == b, cap) for b, cap in enumerate(caps))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SCVBucketedPlan:
+    """Executable SCV plan split into capacity-bucket segments.
+
+    Each segment is an :class:`SCVPlan` holding the tiles whose nnz fits
+    its (static) cap — so one hub tile no longer inflates the padded entry
+    arrays of every other tile the way a single global cap does.  The
+    kernel runs one ``pallas_call`` per segment and the partial outputs
+    are summed; every segment carries its own coverage dummies because
+    each call must define the whole PS output it contributes.
+
+    Pytree contract: the segment tuple is the only child (each segment is
+    itself a pytree whose aux carries its cap), so jit specializes on the
+    ladder ``caps`` + per-segment leaf shapes — the bucket layout is part
+    of the trace signature exactly like a single plan's ``cap``.
+    """
+
+    segments: tuple[SCVPlan, ...]
+
+    def __post_init__(self):
+        if not self.segments:
+            raise ValueError("SCVBucketedPlan needs at least one segment")
+        caps = [s.cap for s in self.segments]
+        if sorted(set(caps)) != caps:
+            raise ValueError(f"segment caps must be ascending and distinct: {caps}")
+        s0 = self.segments[0]
+        for s in self.segments[1:]:
+            if (s.tile, s.shape, s.order) != (s0.tile, s0.shape, s0.order):
+                raise ValueError("segments disagree on tile/shape/order")
+
+    def tree_flatten(self):
+        return (tuple(self.segments), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(tuple(children))
+
+    # -- aux delegated to the segments (validated equal across them) -------
+    @property
+    def tile(self) -> int:
+        return self.segments[0].tile
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.segments[0].shape
+
+    @property
+    def order(self) -> str:
+        return self.segments[0].order
+
+    @property
+    def caps(self) -> tuple[int, ...]:
+        return tuple(s.cap for s in self.segments)
+
+    @property
+    def n_tiles(self) -> int:
+        return sum(s.n_tiles for s in self.segments)
+
+    @property
+    def padded_shape(self) -> tuple[int, int]:
+        return self.segments[0].padded_shape
+
+    @property
+    def n_row_blocks(self) -> int:
+        return self.segments[0].n_row_blocks
+
+    @property
+    def perm(self):
+        """Whether the plan supports per-edge re-weighting (all segments
+        carry perm); exposed for feature tests, not for direct indexing."""
+        perms = [s.perm for s in self.segments]
+        return None if any(p is None for p in perms) else perms
+
+    def reweighted(self, edge_vals) -> "SCVBucketedPlan":
+        """Per-edge re-weighting, delegated to each segment (the segment
+        perms all index the same global edge array)."""
+        return SCVBucketedPlan(
+            tuple(s.reweighted(edge_vals) for s in self.segments)
+        )
+
+
+def plan_from_tiles_bucketed(
+    t: SCVTiles,
+    caps=None,
+    ensure_coverage: bool = True,
+    with_perm: bool = True,
+) -> SCVBucketedPlan:
+    """SCVTiles (host) -> nnz-bucketed device plan.
+
+    ``caps`` defaults to :func:`bucket_caps_for` over the tile nnz
+    histogram.  Every segment gets its own coverage dummies (landing in
+    the bucket its zero nnz selects — the smallest cap), so each of the
+    per-bucket kernel launches defines the full output it contributes.
+    """
+    if caps is None:
+        caps = bucket_caps_for(t.nnz_in_tile, t.tile)
+    segs = bucket_tiles(t, caps)
+    return SCVBucketedPlan(
+        tuple(
+            plan_from_tiles(s, ensure_coverage=ensure_coverage, with_perm=with_perm)
+            for s in segs
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
 # Hybrid dense-tile split (beyond-paper; DESIGN.md §2)
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
@@ -543,13 +781,14 @@ class DenseTiles:
 
 
 def split_hybrid(
-    tiles: SCVTiles, vpu_mxu_ratio: float = 1.0 / 16.0
+    tiles: SCVTiles, vpu_mxu_ratio: float = MXU_VPU_RATIO
 ) -> tuple[SCVTiles, DenseTiles]:
     """Partition logical tiles by density: tiles with
     nnz > T^2 * vpu_mxu_ratio run as dense T x T matmuls on the MXU
     (cheaper there than per-entry gather-FMA on the VPU); the ultra-sparse
-    rest keeps the SCV gather path.  v5e: MXU 16384 MAC/cyc vs VPU 1024
-    lane/cyc -> ratio 1/16."""
+    rest keeps the SCV gather path (``dense_tile_threshold`` is the same
+    rule the Pallas kernel applies per tile in-kernel).  v5e: MXU 16384
+    MAC/cyc vs VPU 1024 lane/cyc -> ratio 1/16."""
     T = tiles.tile
     key = tiles.tile_row.astype(np.int64) * (2**32) + tiles.tile_col
     uniq, inv = np.unique(key, return_inverse=True)

@@ -5,6 +5,8 @@ Handles:
 * inserting zero-nnz dummy tiles so every PS block-row is visited (the
   kernel zero-initializes a strip on first visit; unvisited strips would
   be undefined),
+* segmented (nnz-bucketed) plans: one kernel launch per capacity bucket,
+  partial outputs summed (DESIGN.md §2),
 * custom VJP: d/dZ = Â^T g (played through the reference segment-sum path,
   which XLA fuses well) and d/dvals = <g[row], z[col]> — making SCV
   aggregation trainable end-to-end (GNN training, §VII future work (i)).
@@ -31,12 +33,18 @@ def ensure_row_coverage(
     n_row_blocks: int,
 ):
     """Append one zero-nnz dummy tile per unvisited block-row (host-side)."""
+    if rows.ndim != 2 or cols.ndim != 2 or vals.ndim != 2:
+        raise ValueError(
+            "entry arrays must be 2-D [n_tiles, cap]; got rows.ndim="
+            f"{rows.ndim}, cols.ndim={cols.ndim}, vals.ndim={vals.ndim} "
+            "(reshape 1-D per-entry arrays to (n_tiles, cap) first)"
+        )
     missing = np.setdiff1d(
         np.arange(n_row_blocks, dtype=np.int32), np.unique(tile_row)
     )
     if len(missing) == 0:
         return tile_row, tile_col, rows, cols, vals, nnz_in_tile
-    k, cap = len(missing), rows.shape[1] if rows.ndim == 2 else 1
+    k, cap = len(missing), rows.shape[1]
     return (
         np.concatenate([tile_row, missing]),
         np.concatenate([tile_col, np.zeros(k, tile_col.dtype)]),
@@ -56,25 +64,49 @@ def _pad_z(z: jnp.ndarray, tile: int, feature_block: int) -> jnp.ndarray:
     return jnp.zeros((np_, fp), z.dtype).at[:n, :f].set(z)
 
 
+def _infer_nnz(rows, cols, vals) -> jnp.ndarray:
+    """Per-tile nnz from structural padding (legacy no-nnz callers).
+
+    Padding slots are a suffix of each tile row with val == 0 AND
+    row == col == 0; the inferred count is one past the last slot that
+    breaks that pattern.  (A *real* trailing entry at local (0, 0) with
+    value exactly 0 is indistinguishable from padding — it contributes
+    nothing to the forward either way, and its d/dvals is dropped; pass
+    ``nnz_in_tile`` explicitly where that distinction matters.)
+    """
+    if vals.shape[1] == 0:
+        return jnp.zeros(vals.shape[0], jnp.int32)
+    slot = jnp.arange(vals.shape[1], dtype=jnp.int32)[None, :]
+    is_real = (vals != 0) | (rows != 0) | (cols != 0)
+    return jnp.max(jnp.where(is_real, slot + 1, 0), axis=1).astype(jnp.int32)
+
+
 # custom_vjp over (vals, z).  The integer index arrays are regular
 # (residual-carried) arguments rather than nondiff_argnums: nondiff_argnums
 # rejects tracers, and under an end-to-end jitted GNN forward (plans are
 # pytree *arguments*, not closure constants) every plan array arrives as a
 # tracer.  Their cotangents are symbolic float0 zeros.
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
-def _spmm(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, tile, n_rows, feature_block, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12, 13))
+def _spmm(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z,
+          tile, n_rows, feature_block, interpret, body, chunk, dense_threshold):
     return scv_spmm_pallas(
         tile_row, tile_col, nnz_in_tile, rows, cols, vals, z,
-        tile=tile, n_rows=n_rows, feature_block=feature_block, interpret=interpret,
+        tile=tile, n_rows=n_rows, feature_block=feature_block,
+        interpret=interpret, body=body, chunk=chunk,
+        dense_threshold=dense_threshold,
     )
 
 
-def _spmm_fwd(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, tile, n_rows, feature_block, interpret):
-    out = _spmm(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, tile, n_rows, feature_block, interpret)
+def _spmm_fwd(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z,
+              tile, n_rows, feature_block, interpret, body, chunk, dense_threshold):
+    out = _spmm(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z,
+                tile, n_rows, feature_block, interpret, body, chunk,
+                dense_threshold)
     return out, (tile_row, tile_col, nnz_in_tile, rows, cols, vals, z)
 
 
-def _spmm_bwd(tile, n_rows, feature_block, interpret, res, g):
+def _spmm_bwd(tile, n_rows, feature_block, interpret, body, chunk,
+              dense_threshold, res, g):
     tile_row, tile_col, nnz_in_tile, rows, cols, vals, z = res
     grows = (tile_row[:, None] * tile + rows).reshape(-1)
     gcols = (tile_col[:, None] * tile + cols).reshape(-1)
@@ -114,17 +146,23 @@ def scv_spmm(
     nnz_in_tile: jnp.ndarray | None = None,
     feature_block: int = 256,
     interpret: bool = False,
+    body: str = "vector",
+    chunk: int | None = None,
+    dense_threshold: int | None = None,
 ) -> jnp.ndarray:
     """out = Â Z over the SCV tile layout.  Returns f32[n_rows, F]."""
+    from repro.core.scv import DEFAULT_CHUNK
+
     if tile_row.shape[0] == 0:
         return jnp.zeros((n_rows, z.shape[1]), jnp.float32)
     f_orig = z.shape[1]
     feature_block = min(feature_block, -(-f_orig // 128) * 128)
     zp = _pad_z(z, tile, feature_block)
     if nnz_in_tile is None:
-        # infer: padding slots have val exactly 0 *and* row/col 0; count
-        # conservatively as "all slots" (val==0 slots are harmless anyway)
-        nnz_in_tile = jnp.full(tile_row.shape, vals.shape[1], jnp.int32)
+        # infer the structural padding suffix: without a mask, d/dvals
+        # would be nonzero on padding slots (they share local (0, 0) with a
+        # real corner entry, and <g[0], z[0]> is generally nonzero)
+        nnz_in_tile = _infer_nnz(rows, cols, vals)
     out = _spmm(
         tile_row.astype(jnp.int32),
         tile_col.astype(jnp.int32),
@@ -137,6 +175,9 @@ def scv_spmm(
         n_rows,
         feature_block,
         interpret,
+        body,
+        int(DEFAULT_CHUNK if chunk is None else chunk),
+        dense_threshold,
     )
     return out[:, :f_orig]
 
@@ -147,19 +188,34 @@ def scv_spmm_plan(
     *,
     feature_block: int = 256,
     interpret: bool = False,
+    body: str = "vector",
+    chunk: int | None = None,
+    dense_threshold: int | None = None,
 ) -> jnp.ndarray:
-    """``scv_spmm`` over a ``core.scv.SCVPlan`` pytree.
+    """``scv_spmm`` over a ``core.scv`` plan pytree (``SCVPlan`` or the
+    nnz-bucketed ``SCVBucketedPlan``).
 
     All static kernel configuration (tile size, padded row count, entry
-    capacity via the leaf shapes) comes from the plan's aux data — nothing
-    needs to be threaded alongside the arrays, so callers stay jit-able.
+    capacity via the leaf shapes, the bucket ladder via the segment tuple)
+    comes from the plan's aux data — nothing needs to be threaded alongside
+    the arrays, so callers stay jit-able.  A bucketed plan runs one kernel
+    launch per capacity segment; each launch covers every PS block-row
+    (per-segment coverage dummies), so the partial outputs are defined
+    everywhere and sum to the full aggregation.
     """
-    return scv_spmm(
-        plan.tile_row, plan.tile_col, plan.rows, plan.cols, plan.vals, z,
-        tile=plan.tile, n_rows=plan.padded_shape[0],
-        nnz_in_tile=plan.nnz_in_tile,
-        feature_block=feature_block, interpret=interpret,
-    )
+    # a bare SCVPlan is a 1-tuple; SCVBucketedPlan guarantees >= 1 segment
+    segments = getattr(plan, "segments", (plan,))
+    out = None
+    for seg in segments:
+        part = scv_spmm(
+            seg.tile_row, seg.tile_col, seg.rows, seg.cols, seg.vals, z,
+            tile=seg.tile, n_rows=seg.padded_shape[0],
+            nnz_in_tile=seg.nnz_in_tile,
+            feature_block=feature_block, interpret=interpret,
+            body=body, chunk=chunk, dense_threshold=dense_threshold,
+        )
+        out = part if out is None else out + part
+    return out
 
 
 def scv_spmm_reference(*args, **kw):

@@ -41,3 +41,25 @@ def scv_spmm_reference(
         jnp.float32
     )
     return jax.ops.segment_sum(gathered, grows, num_segments=n_rows)
+
+
+def scv_spmm_reference_plan(plan, z: jnp.ndarray) -> jnp.ndarray:
+    """Oracle over a ``core.scv`` plan pytree — ``SCVPlan`` or the
+    nnz-bucketed ``SCVBucketedPlan`` (duck-typed on ``segments`` to keep
+    this module import-light).  Returns the *padded* [n_rows_p, F] output,
+    matching ``ops.scv_spmm_plan``; segment partials sum exactly like the
+    per-bucket kernel launches."""
+    n_rows = plan.padded_shape[0]
+    segments = getattr(plan, "segments", (plan,))
+    out = jnp.zeros((n_rows, z.shape[1]), jnp.float32)
+    for seg in segments:
+        zp = z
+        if z.shape[0] < seg.padded_shape[1]:
+            zp = jnp.zeros((seg.padded_shape[1], z.shape[1]), z.dtype).at[
+                : z.shape[0]
+            ].set(z)
+        out = out + scv_spmm_reference(
+            seg.tile_row, seg.tile_col, seg.rows, seg.cols, seg.vals, zp,
+            tile=seg.tile, n_rows=n_rows, nnz_in_tile=seg.nnz_in_tile,
+        )
+    return out

@@ -16,17 +16,31 @@ Mapping of the paper's mechanisms onto Pallas/TPU:
   and is written back to HBM exactly once — §III-B's "fetched PS rows are
   reused multiple times before being evicted".
 
-* Within a tile, entries are in column-vector order; consecutive entries
-  hit *different* PS sublanes (distinct rows within a vector), so the FMA
-  chain has no same-address RAW dependency — the TPU analogue of the
-  paper's hazard-free parallelism (§IV-B); see DESIGN.md for the mapping.
+* Two kernel bodies (DESIGN.md §2):
+
+  - ``body="vector"`` (default) — per chunk of C entries, a ``(T, C)``
+    scatter matrix S (``S[t, j] = vals[j] * (rows[j] == t)``, built from a
+    ``broadcasted_iota`` one-hot compare) and a ``(T, C)`` gather one-hot
+    G (``G[u, j] = cols[j] == u``) turn the chunk into two MXU matmuls:
+    ``out += S @ (Gᵀ Z)``.  Entries within a chunk land in *different* PS
+    sublanes (the SCV column-vector order), and the matmul formulation
+    removes the per-entry serialization entirely.  Tiles whose prefetched
+    nnz exceeds ``dense_tile_threshold(T)`` are instead densified
+    in-kernel (``D += S Gᵀ``, a ``(T, T)`` block) and hit the MXU as one
+    plain ``out += D @ Z`` matmul — the hybrid selection rule
+    ``benchmarks/kernel_roofline.py`` models, implemented.  Coverage-dummy
+    tiles (nnz == 0) skip all compute via ``pl.when``.
+
+  - ``body="scalar"`` — the pre-vectorization per-entry FMA loop, kept as
+    the measured baseline for ``benchmarks/kernel_bench.py``.
 
 * Padding entries carry val == 0 and are additionally skipped by bounding
-  the entry loop with the prefetched per-tile nnz.
+  the chunk/entry loop with the prefetched per-tile nnz.
 
 VMEM budget per step (defaults T=256, Fb=256, cap<=2048):
-  Z block 256x256 f32 = 256 KiB, PS block 256 KiB, entries ~24 KiB
-  -> ~0.6 MiB double-buffered, comfortably inside the ~16 MiB/core VMEM.
+  Z block 256x256 f32 = 256 KiB, PS block 256 KiB, entries ~24 KiB,
+  dense scratch 256 KiB -> ~0.8 MiB double-buffered, comfortably inside
+  the ~16 MiB/core VMEM.
 """
 from __future__ import annotations
 
@@ -37,8 +51,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.scv import DEFAULT_CHUNK, dense_tile_threshold
 
-def _kernel(
+
+def _kernel_scalar(
     # scalar-prefetch operands
     tile_row_ref,  # i32[nt]
     tile_col_ref,  # i32[nt]  (steers z BlockSpec; unused in body)
@@ -74,9 +90,98 @@ def _kernel(
     jax.lax.fori_loop(0, nnz, body, 0)
 
 
+def _kernel_vector(
+    tile_row_ref,  # i32[nt]
+    tile_col_ref,  # i32[nt]  (steers z BlockSpec; unused in body)
+    nnz_ref,  # i32[nt]
+    rows_ref,  # i32[1, cap]   (VMEM) local row of each entry
+    cols_ref,  # i32[1, cap]   (VMEM) local col of each entry
+    vals_ref,  # f32[1, cap]   (VMEM) value of each entry
+    z_ref,  # [T, Fb]       (VMEM) combined-feature block
+    out_ref,  # f32[T, Fb]    (VMEM) PS strip block
+    *,
+    tile: int,
+    chunk: int,
+    dense_threshold: int,
+):
+    T, C = tile, chunk
+    t = pl.program_id(1)
+
+    prev = jnp.maximum(t - 1, 0)
+    new_strip = jnp.logical_or(t == 0, tile_row_ref[t] != tile_row_ref[prev])
+
+    @pl.when(new_strip)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    nnz = nnz_ref[t]
+    n_chunks = (nnz + C - 1) // C
+    iota_tc = jax.lax.broadcasted_iota(jnp.int32, (T, C), 0)
+
+    def chunk_mats(k):
+        """Scatter matrix S[t, j] = vals[j]*(rows[j]==t) and gather one-hot
+        G[u, j] = (cols[j]==u) for chunk k.  Padding entries have val == 0,
+        so their S column is zero and they contribute nothing."""
+        sl = pl.ds(k * C, C)
+        r = rows_ref[:, sl]  # (1, C) broadcasts against the (T, C) iota
+        c = cols_ref[:, sl]
+        v = vals_ref[:, sl].astype(jnp.float32)
+        scatter = jnp.where(iota_tc == r, v, 0.0)
+        onehot = (iota_tc == c).astype(jnp.float32)
+        return scatter, onehot
+
+    # Hybrid rule: a tile dense enough that T^2 MXU MACs beat nnz VPU FMAs
+    # is densified in-kernel and runs as one plain matmul.  The branch is
+    # compiled out when no tile of this capacity can reach the threshold.
+    use_dense = 0 <= dense_threshold < rows_ref.shape[1]
+    is_dense = nnz > dense_threshold if use_dense else False
+
+    @pl.when(jnp.logical_and(nnz > 0, jnp.logical_not(is_dense)))
+    def _sparse():
+        z = z_ref[...].astype(jnp.float32)
+
+        def body(k, _):
+            scatter, onehot = chunk_mats(k)
+            # gathered[j, :] = Z[cols[j], :]  (one-hot matmul == exact gather)
+            gathered = jax.lax.dot_general(
+                onehot, z, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            out_ref[...] += jax.lax.dot_general(
+                scatter, gathered, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            return 0
+
+        jax.lax.fori_loop(0, n_chunks, body, 0)
+
+    if use_dense:
+
+        @pl.when(is_dense)
+        def _dense():
+            def body(k, d):
+                scatter, onehot = chunk_mats(k)
+                # D[t, u] += sum_j vals[j] * (rows[j]==t) * (cols[j]==u)
+                return d + jax.lax.dot_general(
+                    scatter, onehot, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+
+            d = jax.lax.fori_loop(
+                0, n_chunks, body, jnp.zeros((T, T), jnp.float32)
+            )
+            out_ref[...] += jax.lax.dot_general(
+                d, z_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("tile", "n_rows", "feature_block", "interpret"),
+    static_argnames=(
+        "tile", "n_rows", "feature_block", "interpret", "body", "chunk",
+        "dense_threshold",
+    ),
 )
 def scv_spmm_pallas(
     tile_row: jnp.ndarray,  # i32[nt]
@@ -91,6 +196,9 @@ def scv_spmm_pallas(
     n_rows: int,  # padded to a multiple of tile
     feature_block: int = 256,
     interpret: bool = False,
+    body: str = "vector",
+    chunk: int = DEFAULT_CHUNK,
+    dense_threshold: int | None = None,
 ) -> jnp.ndarray:
     nt, cap = vals.shape
     n_cols_p, f_p = z.shape
@@ -102,21 +210,43 @@ def scv_spmm_pallas(
         Fb,
     )
 
+    if body == "vector":
+        # chunk the entry arrays evenly: pad cap up to a multiple of the
+        # chunk size (static shapes; the pad slots are structural zeros)
+        C = min(int(chunk), max(cap, 1))
+        if cap % C:
+            pad = C - cap % C
+            rows = jnp.pad(rows, ((0, 0), (0, pad)))
+            cols = jnp.pad(cols, ((0, 0), (0, pad)))
+            vals = jnp.pad(vals, ((0, 0), (0, pad)))
+            cap += pad
+        thr = dense_tile_threshold(T) if dense_threshold is None else int(dense_threshold)
+        kernel = functools.partial(
+            _kernel_vector, tile=T, chunk=C, dense_threshold=thr
+        )
+        # entry arrays feed vector compute (iota compares + matmuls): VMEM
+        entry_space = pltpu.VMEM
+    elif body == "scalar":
+        kernel = _kernel_scalar
+        entry_space = pltpu.SMEM
+    else:
+        raise ValueError(f"unknown kernel body {body!r}")
+
     grid = (f_p // Fb, nt)  # feature blocks outer, tiles inner
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
-            # entry coordinate/value arrays: one tile's slice per step, SMEM
+            # entry coordinate/value arrays: one tile's slice per step
             pl.BlockSpec(
-                (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=pltpu.SMEM
+                (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=entry_space
             ),
             pl.BlockSpec(
-                (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=pltpu.SMEM
+                (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=entry_space
             ),
             pl.BlockSpec(
-                (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=pltpu.SMEM
+                (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=entry_space
             ),
             # Z block steered by the prefetched tile column
             pl.BlockSpec((T, Fb), lambda f, t, tr, tc, nz: (tc[t], f)),
@@ -125,7 +255,7 @@ def scv_spmm_pallas(
     )
 
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_rows, f_p), jnp.float32),
         interpret=interpret,

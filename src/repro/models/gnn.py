@@ -26,7 +26,13 @@ import numpy as np
 
 from repro.core.aggregate import aggregate_scv_plan
 from repro.core.formats import COOMatrix, block_diag_coo
-from repro.core.scv import SCVPlan, coo_to_scv_tiles, plan_from_tiles
+from repro.core.scv import (
+    SCVBucketedPlan,
+    SCVPlan,
+    coo_to_scv_tiles,
+    plan_from_tiles,
+    plan_from_tiles_bucketed,
+)
 from repro.models.layers import make_param, split_tree
 
 
@@ -43,7 +49,7 @@ class Graph:
     """
 
     n_nodes: int
-    plan: SCVPlan
+    plan: "SCVPlan | SCVBucketedPlan"
     rows: Optional[jnp.ndarray] = None  # i32[E] (normalized adjacency entries)
     cols: Optional[jnp.ndarray] = None
     vals: Optional[jnp.ndarray] = None  # f32[E] normalized weights (GCN) or 1s
@@ -61,9 +67,41 @@ def build_graph(
     tile: int = 64,
     backend_cap: Optional[int] = None,
     with_edges: bool = True,
+    bucket_caps=None,
 ) -> Graph:
-    tiles = coo_to_scv_tiles(adj, tile, cap=backend_cap)
-    plan = plan_from_tiles(tiles)  # coverage dummies + perm padding, one path
+    """COO adjacency -> device-ready :class:`Graph`.
+
+    ``bucket_caps`` selects the nnz-bucketed plan layout: ``"auto"``
+    derives the capacity ladder from the tile nnz histogram
+    (``core.scv.bucket_caps_for``); an explicit ascending tuple pins it
+    (serving uses a fixed ladder so every member plan shares segment aux).
+    ``None`` keeps the single-cap :class:`SCVPlan`.  When a ladder is
+    active it supersedes ``backend_cap`` entirely (heavy tiles chain-split
+    at ``caps[-1]``, the per-segment caps come from the ladder).
+    """
+    if bucket_caps is not None and backend_cap is not None:
+        raise ValueError(
+            "backend_cap and bucket_caps are mutually exclusive: the "
+            "bucket ladder defines every capacity (chain-split at caps[-1])"
+        )
+    if bucket_caps is not None:
+        if bucket_caps == "auto":
+            from repro.core.scv import bucket_caps_for, tile_nnz_histogram
+
+            caps = bucket_caps_for(tile_nnz_histogram(adj, tile), tile)
+        else:
+            caps = tuple(int(c) for c in bucket_caps)
+            if list(caps) != sorted(set(caps)) or caps[0] <= 0:
+                raise ValueError(
+                    f"bucket_caps must be ascending distinct positives, got {caps}"
+                )
+        # chain-split heavy tiles at the ladder's largest cap so every
+        # chain fits some bucket
+        tiles = coo_to_scv_tiles(adj, tile, cap=caps[-1])
+        plan = plan_from_tiles_bucketed(tiles, caps=caps)
+    else:
+        tiles = coo_to_scv_tiles(adj, tile, cap=backend_cap)
+        plan = plan_from_tiles(tiles)  # coverage dummies + perm padding, one path
     if with_edges:
         rows, cols, vals = (
             jnp.asarray(adj.rows), jnp.asarray(adj.cols), jnp.asarray(adj.vals),
@@ -77,14 +115,9 @@ def _agg(g: Graph, z, edge_vals=None, backend="jnp"):
     """Aggregate with optional per-edge re-weighting (GAT)."""
     plan = g.plan
     if edge_vals is not None:
-        if plan.perm is None:
-            raise ValueError(
-                "per-edge re-weighting needs the plan's perm leaf; this plan "
-                "was built without it (with_edges/with_perm disabled)"
-            )
-        # perm == -1 (padding slot) gathers the appended zero
-        ev = jnp.concatenate([edge_vals, jnp.zeros((1,), edge_vals.dtype)])
-        plan = plan.with_vals(ev[plan.perm].astype(plan.vals.dtype))
+        # perm == -1 (padding slot) gathers an appended zero; bucketed
+        # plans re-gather per capacity segment
+        plan = plan.reweighted(edge_vals)
     return aggregate_scv_plan(plan, z, backend=backend)[: g.n_nodes]
 
 

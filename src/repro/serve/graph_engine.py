@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import COOMatrix
-from repro.core.scv import SCVPlan
+from repro.core.scv import SCVBucketedPlan, SCVPlan
 from repro.models.gnn import (
     BatchedGraph,
     GNNConfig,
@@ -78,6 +78,12 @@ class GraphEngineConfig:
     max_batch_nodes: int = 4096
     tile: int = 64
     cap: int = 64  # fixed per-tile entry capacity (static shapes across plans)
+    # nnz-bucketed plans: a fixed ascending capacity ladder shared by every
+    # member plan (so composites fuse segment-by-segment and jit traces are
+    # shared across batches).  Empty tuple = legacy single-cap plans; when
+    # set, the ladder supersedes ``cap`` (heavy tiles chain-split at
+    # ``bucket_caps[-1]``).
+    bucket_caps: tuple[int, ...] = ()
     node_buckets: tuple[int, ...] = (256, 512, 1024, 2048, 4096)
     cache_entries: int = 256
     cache_bytes: int = 256 << 20
@@ -89,6 +95,12 @@ class GraphEngineConfig:
         for field in ("max_batch_graphs", "max_batch_nodes", "tile", "cap"):
             if getattr(self, field) <= 0:
                 raise ValueError(f"{field} must be positive")
+        if self.bucket_caps:
+            caps = tuple(int(c) for c in self.bucket_caps)
+            if list(caps) != sorted(set(caps)) or caps[0] <= 0:
+                raise ValueError(
+                    f"bucket_caps must be ascending distinct positives, got {caps}"
+                )
         if self.completed_history < 0:
             raise ValueError("completed_history must be >= 0")
         if self.node_buckets and self.max_batch_nodes > max(self.node_buckets):
@@ -118,10 +130,104 @@ def _bucket_nodes(n: int, buckets: tuple[int, ...], tile: int) -> int:
     return -(-p // tile) * tile
 
 
+def _cat(parts, pad_blocks, dtype):
+    # convert per block BEFORE concatenating: mixing int32 members with
+    # default-float64 pads would promote the whole composite to f64
+    blocks = [np.asarray(p, dtype) for p in parts]
+    blocks += [np.asarray(b, dtype) for b in pad_blocks]
+    return np.concatenate(blocks) if blocks else np.zeros(0, dtype)
+
+
+def _assemble_segment(
+    segs: list[SCVPlan],
+    blk_off: np.ndarray,
+    n_aligned: int,
+    pad_nodes: int,
+    T: int,
+    cap: int,
+    order: str,
+    entry_off: Optional[np.ndarray],
+) -> SCVPlan:
+    """Fuse one capacity segment across members into the composite segment.
+
+    Member tile coordinates shift by the member's block offset; then two
+    pad blocks follow: fresh zero-nnz coverage tiles for the bucket-padding
+    block-rows at the tail (the Pallas kernel zero-defines a PS strip only
+    when it visits its row — and *every* segment is its own kernel launch,
+    so every segment needs the tail covered), then tile-count padding up
+    to the next power of two so jit sees a bounded set of array shapes.
+    The tile-count padding repeats the *last* tile's coordinates: the
+    kernel then revisits an already-initialized PS strip (no re-zeroing —
+    appending a fresh block-row would wipe real output), and the jnp
+    reference masks the zero-nnz slots via nnz_in_tile.
+
+    ``entry_off`` (per-member edge-array offsets) enables the composite
+    perm: member perm entries shift into the concatenated edge space,
+    ``-1`` padding slots stay ``-1``.
+    """
+    k = len(segs)
+    nts = np.array([s.n_tiles for s in segs], np.int64)
+    nt_members = int(nts.sum())
+    n_cov = pad_nodes // T - n_aligned // T  # fresh tail coverage tiles
+    nt = nt_members + n_cov
+    nt_bucket = 8
+    while nt_bucket < nt:
+        nt_bucket *= 2
+    # repeat-last-coordinate padding tiles (an empty composite stays empty)
+    n_fill = nt_bucket - nt if nt else 0
+
+    shift = np.repeat(blk_off[:k], nts)  # per-tile block-diagonal offset
+    tile_row = _cat(
+        [s.tile_row for s in segs],
+        [np.arange(n_aligned // T, pad_nodes // T, dtype=np.int64)],
+        np.int64,
+    )
+    tile_row[:nt_members] += shift
+    tile_col = _cat(
+        [s.tile_col for s in segs], [np.zeros(n_cov, np.int64)], np.int64
+    )
+    tile_col[:nt_members] += shift
+    last_r = tile_row[nt - 1] if nt else 0
+    last_c = tile_col[nt - 1] if nt else 0
+    tile_row = np.concatenate([tile_row, np.full(n_fill, last_r)]).astype(np.int32)
+    tile_col = np.concatenate([tile_col, np.full(n_fill, last_c)]).astype(np.int32)
+
+    n_pad = n_cov + n_fill
+    rows2 = _cat([s.rows for s in segs], [np.zeros((n_pad, cap))], np.int32)
+    cols2 = _cat([s.cols for s in segs], [np.zeros((n_pad, cap))], np.int32)
+    vals2 = _cat([s.vals for s in segs], [np.zeros((n_pad, cap))], np.float32)
+    nnz2 = _cat([s.nnz_in_tile for s in segs], [np.zeros(n_pad)], np.int32)
+
+    perm_j = None
+    if entry_off is not None:
+        perm = np.full((nt + n_fill, cap), -1, np.int32)
+        if k:
+            pstack = np.concatenate([np.asarray(s.perm, np.int64) for s in segs])
+            poff = np.repeat(entry_off[:k], nts)[:, None]
+            perm[:nt_members] = np.where(
+                pstack >= 0, pstack + poff, -1
+            ).astype(np.int32)
+        perm_j = jnp.asarray(perm)
+
+    return SCVPlan(
+        tile_row=jnp.asarray(tile_row),
+        tile_col=jnp.asarray(tile_col),
+        rows=jnp.asarray(rows2),
+        cols=jnp.asarray(cols2),
+        vals=jnp.asarray(vals2),
+        nnz_in_tile=jnp.asarray(nnz2),
+        perm=perm_j,
+        tile=T,
+        cap=cap,
+        shape=(pad_nodes, pad_nodes),
+        order=order,
+    )
+
+
 def assemble_batched_graph(
     plans: list[Graph], tile: int, pad_nodes: int, with_edges: bool = True
 ) -> BatchedGraph:
-    """Fuse prepared per-graph plans into one block-diagonal ``SCVPlan``.
+    """Fuse prepared per-graph plans into one block-diagonal plan.
 
     Each member plan already tiles its (tile-padded) own grid, so the
     composite is index arithmetic over the members' plan pytrees: member
@@ -133,6 +239,12 @@ def assemble_batched_graph(
     the tail get fresh zero-nnz coverage tiles so the Pallas kernel
     defines the whole output.
 
+    Members carrying nnz-bucketed ``SCVBucketedPlan``s (all on the same
+    capacity ladder) compose segment-by-segment — segment j of the
+    composite is the fusion of every member's segment j — and the result
+    is itself an ``SCVBucketedPlan``; single-cap members compose to a
+    single ``SCVPlan`` exactly as before.
+
     ``with_edges`` controls the composite COO edge arrays + perm: only
     GAT's attention reads them, so non-GAT batches skip both the assembly
     cost and the cache bytes — at the price of a model-kind component in
@@ -140,13 +252,23 @@ def assemble_batched_graph(
     """
     T = tile
     k = len(plans)
-    caps = {g.plan.cap for g in plans}
-    if len(caps) > 1:
-        raise ValueError(f"member plans disagree on cap: {sorted(caps)}")
+    bucketed = any(isinstance(g.plan, SCVBucketedPlan) for g in plans)
+    if bucketed:
+        ladders = {g.plan.caps if isinstance(g.plan, SCVBucketedPlan) else (g.plan.cap,)
+                   for g in plans}
+        if len(ladders) > 1:
+            raise ValueError(
+                f"member plans disagree on bucket ladder: {sorted(ladders)}"
+            )
+        ladder = ladders.pop()
+    else:
+        caps = {g.plan.cap for g in plans}
+        if len(caps) > 1:
+            raise ValueError(f"member plans disagree on cap: {sorted(caps)}")
+        ladder = (caps.pop() if caps else 8,)
     orders = {g.plan.order for g in plans}
     if len(orders) > 1:
         raise ValueError(f"member plans disagree on order: {sorted(orders)}")
-    cap = caps.pop() if caps else 8
     order = orders.pop() if orders else "zmorton"
 
     starts = np.zeros(k + 1, np.int64)
@@ -158,55 +280,9 @@ def assemble_batched_graph(
     pad_nodes = -(-max(pad_nodes, n_aligned) // T) * T
     blk_off = starts // T
 
-    # --- composite tile arrays: member plan leaves shifted + concatenated,
-    # then two pad blocks: fresh zero-nnz coverage tiles for the bucket-
-    # padding block-rows at the tail (the Pallas kernel zero-defines a PS
-    # strip only when it visits its row), then tile-count padding up to the
-    # next power of two so jit sees a bounded set of array shapes.  The
-    # tile-count padding repeats the *last* tile's coordinates: the kernel
-    # then revisits an already-initialized PS strip (no re-zeroing —
-    # appending a fresh block-row would wipe real output), and the jnp
-    # reference masks the zero-nnz slots via nnz_in_tile.
-    nts = np.array([g.plan.n_tiles for g in plans], np.int64)
-    nt_members = int(nts.sum())
-    n_cov = pad_nodes // T - n_aligned // T  # fresh tail coverage tiles
-    nt = nt_members + n_cov
-    nt_bucket = 8
-    while nt_bucket < nt:
-        nt_bucket *= 2
-    # repeat-last-coordinate padding tiles (an empty composite stays empty)
-    n_fill = nt_bucket - nt if nt else 0
-
-    def cat(parts, pad_blocks, dtype):
-        # convert per block BEFORE concatenating: mixing int32 members with
-        # default-float64 pads would promote the whole composite to f64
-        blocks = [np.asarray(p, dtype) for p in parts]
-        blocks += [np.asarray(b, dtype) for b in pad_blocks]
-        return np.concatenate(blocks) if blocks else np.zeros(0, dtype)
-
-    shift = np.repeat(blk_off[:k], nts)  # per-tile block-diagonal offset
-    tile_row = cat(
-        [g.plan.tile_row for g in plans],
-        [np.arange(n_aligned // T, pad_nodes // T, dtype=np.int64)],
-        np.int64,
-    )
-    tile_row[:nt_members] += shift
-    tile_col = cat(
-        [g.plan.tile_col for g in plans], [np.zeros(n_cov, np.int64)], np.int64
-    )
-    tile_col[:nt_members] += shift
-    last_r = tile_row[nt - 1] if nt else 0
-    last_c = tile_col[nt - 1] if nt else 0
-    tile_row = np.concatenate([tile_row, np.full(n_fill, last_r)]).astype(np.int32)
-    tile_col = np.concatenate([tile_col, np.full(n_fill, last_c)]).astype(np.int32)
-
-    n_pad = n_cov + n_fill
-    rows2 = cat([g.plan.rows for g in plans], [np.zeros((n_pad, cap))], np.int32)
-    cols2 = cat([g.plan.cols for g in plans], [np.zeros((n_pad, cap))], np.int32)
-    vals2 = cat([g.plan.vals for g in plans], [np.zeros((n_pad, cap))], np.float32)
-    nnz2 = cat([g.plan.nnz_in_tile for g in plans], [np.zeros(n_pad)], np.int32)
-
-    # --- composite COO edge arrays + perm (GAT re-weighting only) ---
+    # --- composite COO edge arrays (GAT re-weighting only) ---
+    entry_off = None
+    erows = ecols = evals = None
     if with_edges:
         for g in plans:
             if g.rows is None or g.plan.perm is None:
@@ -222,40 +298,24 @@ def assemble_batched_graph(
                 f"composite entry count {entry_off[-1]} overflows the "
                 "int32 perm leaf"
             )
-        rows = cat([g.rows for g in plans], [], np.int64)
-        cols = cat([g.cols for g in plans], [], np.int64)
+        rows = _cat([g.rows for g in plans], [], np.int64)
+        cols = _cat([g.cols for g in plans], [], np.int64)
         eshift = np.repeat(starts[:k], edge_counts)
-        rows = (rows + eshift).astype(np.int32)
-        cols = (cols + eshift).astype(np.int32)
-        vals = cat([g.vals for g in plans], [], np.float32)
-        perm = np.full((nt + n_fill, cap), -1, np.int32)
-        if k:
-            pstack = np.concatenate(
-                [np.asarray(g.plan.perm, np.int64) for g in plans]
-            )
-            poff = np.repeat(entry_off[:k], nts)[:, None]
-            perm[:nt_members] = np.where(
-                pstack >= 0, pstack + poff, -1
-            ).astype(np.int32)
-        erows, ecols, evals = jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals)
-        perm_j = jnp.asarray(perm)
-    else:
-        erows = ecols = evals = None
-        perm_j = None
+        erows = jnp.asarray((rows + eshift).astype(np.int32))
+        ecols = jnp.asarray((cols + eshift).astype(np.int32))
+        evals = jnp.asarray(_cat([g.vals for g in plans], [], np.float32))
 
-    plan = SCVPlan(
-        tile_row=jnp.asarray(tile_row),
-        tile_col=jnp.asarray(tile_col),
-        rows=jnp.asarray(rows2),
-        cols=jnp.asarray(cols2),
-        vals=jnp.asarray(vals2),
-        nnz_in_tile=jnp.asarray(nnz2),
-        perm=perm_j,
-        tile=T,
-        cap=cap,
-        shape=(pad_nodes, pad_nodes),
-        order=order,
-    )
+    def member_segments(g: Graph) -> tuple[SCVPlan, ...]:
+        return g.plan.segments if isinstance(g.plan, SCVBucketedPlan) else (g.plan,)
+
+    composed = [
+        _assemble_segment(
+            [member_segments(g)[j] for g in plans],
+            blk_off, n_aligned, pad_nodes, T, cap, order, entry_off,
+        )
+        for j, cap in enumerate(ladder)
+    ]
+    plan = SCVBucketedPlan(tuple(composed)) if bucketed else composed[0]
     graph = Graph(
         n_nodes=pad_nodes, plan=plan, rows=erows, cols=ecols, vals=evals
     )
@@ -377,20 +437,31 @@ class GraphServeEngine:
         plans always carry edges (one representation serves every kind)
         and stay kind-agnostic."""
         T, cap = self.cfg.tile, self.cfg.cap
+        bucket_caps = tuple(self.cfg.bucket_caps) or None
         _, mcfg = self.models[batch[0].model]
         with_edges = mcfg.kind == "gat"
-        member_keys = [coo_content_key(r.adj, tile=T, cap=cap) for r in batch]
+        # the capacity layout is plan aux: it belongs in both key levels
+        # (a single-cap plan and a bucketed plan of the same graph are
+        # different device objects)
+        cap_sig = bucket_caps if bucket_caps else cap
+        member_keys = [coo_content_key(r.adj, tile=T, cap=cap_sig) for r in batch]
         aligned = sum(-(-r.adj.shape[0] // T) * T for r in batch)
         bucket = _bucket_nodes(aligned, self.cfg.node_buckets, T)
         ckey = combine_keys(
             member_keys,
-            salt=f"batch;bucket={bucket};tile={T};edges={int(with_edges)};",
+            salt=f"batch;bucket={bucket};tile={T};caps={cap_sig};"
+            f"edges={int(with_edges)};",
         )
 
         def build() -> BatchedGraph:
             plans = [
                 self.plan_cache.get_or_build(
-                    k, lambda r=r: build_graph(r.adj, tile=T, backend_cap=cap)
+                    k,
+                    lambda r=r: build_graph(
+                        r.adj, tile=T,
+                        backend_cap=None if bucket_caps else cap,
+                        bucket_caps=bucket_caps,
+                    ),
                 )
                 for k, r in zip(member_keys, batch)
             ]

@@ -52,8 +52,12 @@ from repro.core.formats import COOMatrix
 # ---------------------------------------------------------------------------
 # content keys
 # ---------------------------------------------------------------------------
-def coo_content_key(adj: COOMatrix, *, tile: int, cap: Optional[int] = None) -> str:
-    """Stable content hash of a COO adjacency + plan parameters."""
+def coo_content_key(adj: COOMatrix, *, tile: int, cap: Any = None) -> str:
+    """Stable content hash of a COO adjacency + plan parameters.
+
+    ``cap`` is the capacity signature: an int for single-cap plans, the
+    ascending bucket ladder tuple for nnz-bucketed plans (the layout is
+    plan aux, so it must key the cached device object)."""
     h = hashlib.blake2b(digest_size=16)
     h.update(f"shape={adj.shape};tile={tile};cap={cap};".encode())
     for a in (adj.rows, adj.cols, adj.vals):
