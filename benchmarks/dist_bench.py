@@ -1,0 +1,155 @@
+"""Distributed executor benchmark: sharded SCV aggregation on a forced
+8-host-device mesh (DESIGN.md §5).
+
+The PR gate for the unified plan-executor rework: on the serving-scale
+sparse regime (131k nodes, 1M power-law edges — the `sparse_graph` record
+of BENCH_kernel.json), an nnz-bucketed plan placed by
+``core.exec.PlanExecutor`` must
+
+* match the single-device bucketed result **bit for bit** under tile-span,
+  feature-axis, and 2-D sharding (integer-valued inputs: every partial sum
+  is exactly representable in f32, so psum reassociation cannot change
+  bits),
+* keep the equal-nnz span split balanced (imbalance < IMBALANCE_GATE —
+  the paper's §V-G fine-grain claim), and
+* stay within MAX_OVERHEAD x of the single-device bucketed wall time (the
+  no-regression gate: the 8 "devices" here are XLA host-platform fakes
+  time-slicing ONE CPU, so the sharded path cannot be faster — the gate
+  bounds the placement + collective overhead that a real mesh would
+  amortize across real chips).
+
+Results land in ``BENCH_dist.json`` (repo root) and as
+``name,us_per_call,derived`` CSV rows matching benchmarks/run.py.
+
+    PYTHONPATH=src python benchmarks/dist_bench.py
+"""
+from __future__ import annotations
+
+import os
+
+# append (not setdefault): an inherited XLA_FLAGS must not silently leave
+# this bench on one device — the 8-part placements would then error out
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import aggregate_scv_plan
+from repro.core.exec import PlanExecutor, ShardingDecision
+from repro.core.scv import (
+    bucket_caps_for,
+    coo_to_scv_tiles,
+    plan_from_tiles_bucketed,
+    tile_nnz_histogram,
+)
+from repro.simul.datasets import powerlaw_graph
+
+N_NODES = 1 << 17
+N_EDGES = 1_000_000
+TILE = 64
+FEATURES = 64
+REPS = 2
+IMBALANCE_GATE = 1.5
+#: Sharded-on-fake-devices wall time may not exceed this multiple of the
+#: single-device bucketed time (8 fakes time-slice one CPU; the collective
+#: and dispatch overhead is what this bounds).
+MAX_OVERHEAD = 6.0
+
+DECISIONS = (
+    ShardingDecision("tiles", 8, 1),
+    ShardingDecision("features", 1, 8),
+    ShardingDecision("2d", 4, 2),
+)
+
+
+def bench(fn, *args) -> float:
+    fn(*args).block_until_ready()  # compile + warm
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> int:
+    adj = powerlaw_graph(N_NODES, N_EDGES, seed=0)
+    # small integer weights/features: bit-identical under any reassociation
+    rng = np.random.default_rng(0)
+    adj.vals[:] = rng.integers(1, 4, size=adj.nnz).astype(np.float32)
+    # derive the ladder BEFORE tiling (as build_graph(bucket_caps="auto")
+    # does): auto-cap tiling first would chain-split everything to the
+    # smallest cap and collapse the ladder to one segment, and this gate
+    # exists precisely to exercise the multi-segment sharded path (one
+    # psum across all segments)
+    caps = bucket_caps_for(tile_nnz_histogram(adj, TILE), TILE)
+    tiles = coo_to_scv_tiles(adj, TILE, cap=caps[-1])
+    plan = plan_from_tiles_bucketed(tiles, caps=caps)
+    assert len(plan.segments) > 1, f"gate needs a multi-segment plan, got {caps}"
+    z = jnp.asarray(
+        rng.integers(-3, 4, size=(adj.shape[1], FEATURES)).astype(np.float32)
+    )
+
+    agg = jax.jit(lambda p, zz: aggregate_scv_plan(p, zz, backend="jnp"))
+    t_single = bench(agg, plan, z)
+    single = np.asarray(agg(plan, z))
+
+    ex = PlanExecutor()
+    rows = []
+    print("name,us_per_call,derived")
+    print(f"dist_single_bucketed,{t_single * 1e6:.0f},"
+          f"{adj.nnz / t_single / 1e6:.1f} Mnnz/s")
+    for dec in DECISIONS:
+        sp = ex.prepare(plan, decision=dec)
+        t = bench(agg, sp, z)
+        out = np.asarray(agg(sp, z))
+        exact = bool(np.array_equal(out, single))
+        imb = sp.imbalance
+        rows.append({
+            "decision": dec.signature,
+            "seconds": t,
+            "overhead_vs_single": t / t_single,
+            "bit_exact": exact,
+            "imbalance": imb,
+            "imbalance_per_segment": list(sp.imbalance_per_segment),
+        })
+        print(f"dist_{dec.kind},{t * 1e6:.0f},"
+              f"x{t / t_single:.2f} vs single; imb {imb:.3f}; "
+              f"exact {exact}")
+
+    payload = {
+        "n_nodes": N_NODES,
+        "n_edges": N_EDGES,
+        "tile": TILE,
+        "features": FEATURES,
+        "caps": list(plan.caps),
+        "n_devices": len(jax.devices()),
+        "single_bucketed_seconds": t_single,
+        "max_overhead_gate": MAX_OVERHEAD,
+        "imbalance_gate": IMBALANCE_GATE,
+        "placements": rows,
+    }
+    out_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_dist.json"
+    out_path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {out_path}")
+
+    ok = all(r["bit_exact"] for r in rows)
+    ok = ok and all(r["imbalance"] < IMBALANCE_GATE for r in rows)
+    ok = ok and max(r["overhead_vs_single"] for r in rows) <= MAX_OVERHEAD
+    print("PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

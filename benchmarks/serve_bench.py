@@ -1,4 +1,6 @@
-"""Serving benchmark: batched engine + plan cache vs the naive per-graph loop.
+"""Serving benchmark: batched engine + plan cache vs the naive per-graph loop,
+plus the bucketed-vs-single-cap engine A/B that gates the
+``GraphEngineConfig.bucket_caps`` default.
 
 Workload: a mixed stream of requests drawn from a small pool of hot graphs
 (the serving regime the plan cache targets).  The naive baseline rebuilds
@@ -7,14 +9,24 @@ the SCV plan and runs one forward per request — exactly what a caller of
 preprocessing through the content-addressed plan cache and fuses each wave
 into one block-diagonal launch.
 
-Prints ``name,us_per_call,derived`` CSV rows (matching benchmarks/run.py)
-and a human summary; exits non-zero if the engine fails to beat the naive
-loop or the cache never hits (the PR's acceptance gate).
+Three timed configurations:
+
+* ``naive``      — per-request build + forward (no engine)
+* ``single_cap`` — engine with ``bucket_caps=()`` (legacy single-cap plans)
+* ``bucketed``   — engine with the default capacity ladder
+
+Prints ``name,us_per_call,derived`` CSV rows (matching benchmarks/run.py),
+writes the A/B record to ``BENCH_serve.json``, and exits non-zero if the
+engine fails to beat the naive loop, the cache never hits, outputs
+diverge, or the bucketed engine regresses the single-cap engine by more
+than ``AB_SLACK`` (the no-regression gate for the flipped default).
 
     PYTHONPATH=src python benchmarks/serve_bench.py
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 import time
 
@@ -28,6 +40,11 @@ from repro.serve.graph_engine import (
     GraphServeEngine,
 )
 from repro.simul.datasets import gcn_normalize, powerlaw_graph
+
+#: The bucketed engine may not fall below this fraction of the single-cap
+#: engine's throughput (timer noise allowance; bucketed wins on padded
+#: slots, which only pays off at scale — the gate is "no regression").
+AB_SLACK = 0.85
 
 
 def make_stream(rng, pool, n_requests, d_in):
@@ -63,51 +80,103 @@ def run_engine(params, cfg, stream, ecfg, wave=16):
 def main() -> int:
     rng = np.random.default_rng(0)
     d_in, n_requests, tile, cap = 32, 96, 64, 64
+    # sparse power-law pool — the regime the capacity ladder targets: a
+    # hub tile forces single-cap padding on every near-empty tile, while
+    # the ladder sends those to cap 8 (BENCH_kernel.json `sparse_graph`
+    # measures the same effect at 1M edges)
     pool = [
-        gcn_normalize(powerlaw_graph(n, 4 * n, seed=i))
-        for i, n in enumerate([60, 90, 120, 150, 200, 250])
+        gcn_normalize(powerlaw_graph(n, 3 * n, seed=i))
+        for i, n in enumerate([600, 900, 1200, 1500, 2000, 2500])
     ]
     cfg = GNNConfig(name="gcn", kind="gcn", d_in=d_in, d_hidden=64,
                     n_classes=8, backend="jnp")
     params, _ = init_gnn(jax.random.PRNGKey(0), cfg)
     stream = make_stream(rng, pool, n_requests, d_in)
-    ecfg = GraphEngineConfig(max_batch_graphs=16, max_batch_nodes=4096,
-                             tile=tile, cap=cap)
+    base = dict(max_batch_graphs=16, max_batch_nodes=8192, tile=tile, cap=cap,
+                node_buckets=(2048, 4096, 8192))
+    ecfg_single = GraphEngineConfig(**base, bucket_caps=())
+    ecfg_bucketed = GraphEngineConfig(**base)  # default ladder
 
-    # warmup both paths (jit compilation out of the timed region)
-    run_naive(params, cfg, stream[:4], tile, cap)
-    run_engine(params, cfg, stream[:4], ecfg)
+    # warmup all paths over the FULL stream: a serving process is
+    # long-lived, so the steady state (every padding-bucket shape already
+    # traced — retraces are bounded by design) is the regime that matters;
+    # engine instances are fresh per run but jit caches are process-wide
+    run_naive(params, cfg, stream, tile, cap)
+    run_engine(params, cfg, stream, ecfg_single)
+    run_engine(params, cfg, stream, ecfg_bucketed)
 
-    t_naive, out_naive = run_naive(params, cfg, stream, tile, cap)
-    t_engine, out_engine, metrics = run_engine(params, cfg, stream, ecfg)
+    # best-of-REPS timing: the A/B ratio is a CI gate, and a one-shot
+    # measurement flakes on a single GC pause or scheduler hiccup
+    REPS = 2
+    t_naive, out_naive = min(
+        (run_naive(params, cfg, stream, tile, cap) for _ in range(REPS)),
+        key=lambda r: r[0],
+    )
+    t_single, out_single, m_single = min(
+        (run_engine(params, cfg, stream, ecfg_single) for _ in range(REPS)),
+        key=lambda r: r[0],
+    )
+    t_bucketed, out_bucketed, m_bucketed = min(
+        (run_engine(params, cfg, stream, ecfg_bucketed) for _ in range(REPS)),
+        key=lambda r: r[0],
+    )
 
     err = max(
-        float(np.abs(out_naive[rid] - out_engine[rid]).max())
+        max(float(np.abs(out_naive[rid] - out_single[rid]).max()),
+            float(np.abs(out_naive[rid] - out_bucketed[rid]).max()))
         for rid in out_naive
     )
     naive_gps = n_requests / t_naive
-    engine_gps = n_requests / t_engine
-    speedup = t_naive / t_engine
-    hit_rate = metrics["plan_cache_hit_rate"]
+    single_gps = n_requests / t_single
+    bucketed_gps = n_requests / t_bucketed
+    speedup = t_naive / t_bucketed
+    ab_ratio = bucketed_gps / single_gps
+    hit_rate = m_bucketed["plan_cache_hit_rate"]
 
     print("name,us_per_call,derived")
     print(f"serve_naive_loop,{t_naive / n_requests * 1e6:.1f},"
           f"{naive_gps:.1f} graphs/s")
-    print(f"serve_engine_batched,{t_engine / n_requests * 1e6:.1f},"
-          f"{engine_gps:.1f} graphs/s")
+    print(f"serve_engine_single_cap,{t_single / n_requests * 1e6:.1f},"
+          f"{single_gps:.1f} graphs/s")
+    print(f"serve_engine_bucketed,{t_bucketed / n_requests * 1e6:.1f},"
+          f"{bucketed_gps:.1f} graphs/s")
     print(f"serve_speedup,{0.0:.1f},x{speedup:.2f}")
+    print(f"serve_bucketed_vs_single,{0.0:.1f},x{ab_ratio:.2f}")
     print()
     print(f"stream: {n_requests} requests over {len(pool)} hot graphs")
-    print(f"naive loop   : {naive_gps:8.1f} graphs/s")
-    print(f"engine       : {engine_gps:8.1f} graphs/s  (x{speedup:.2f}, "
-          f"{metrics['launches']} launches)")
+    print(f"naive loop        : {naive_gps:8.1f} graphs/s")
+    print(f"engine single-cap : {single_gps:8.1f} graphs/s")
+    print(f"engine bucketed   : {bucketed_gps:8.1f} graphs/s  (x{speedup:.2f} "
+          f"vs naive, {m_bucketed['launches']} launches)")
+    print(f"A/B bucketed/single-cap throughput: x{ab_ratio:.2f} "
+          f"(gate: >= {AB_SLACK})")
     print(f"plan cache   : hit rate {hit_rate:.0%} "
-          f"({metrics['plan_cache_hits']} hits / "
-          f"{metrics['plan_cache_misses']} misses, "
-          f"{metrics['plan_cache_bytes'] / 1024:.0f} KiB)")
+          f"({m_bucketed['plan_cache_hits']} hits / "
+          f"{m_bucketed['plan_cache_misses']} misses, "
+          f"{m_bucketed['plan_cache_bytes'] / 1024:.0f} KiB)")
     print(f"max |engine - naive| = {err:.2e}")
 
-    ok = speedup > 1.0 and hit_rate > 0.0 and err < 1e-4
+    record = {
+        "n_requests": n_requests,
+        "naive_graphs_per_s": naive_gps,
+        "single_cap_graphs_per_s": single_gps,
+        "bucketed_graphs_per_s": bucketed_gps,
+        "bucketed_vs_single_cap": ab_ratio,
+        "ab_slack": AB_SLACK,
+        "bucket_caps": list(ecfg_bucketed.bucket_caps),
+        "hit_rate": hit_rate,
+        "max_abs_err": err,
+    }
+    out_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    out_path.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"wrote {out_path}")
+
+    ok = (
+        speedup > 1.0
+        and hit_rate > 0.0
+        and err < 1e-4
+        and ab_ratio >= AB_SLACK
+    )
     print("PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -14,7 +14,14 @@
 #   * benchmarks/kernel_bench.py (vectorized/bucketed Pallas kernel body
 #     >= 3x the scalar-loop kernel at 1M edges on a power-law graph,
 #     interpret mode, bit-exact vs the jnp reference; emits
-#     BENCH_kernel.json).
+#     BENCH_kernel.json),
+#   * benchmarks/dist_bench.py (executor-placed bucketed plan on a forced
+#     8-host-device mesh: tile/feature/2-D sharding bit-exact vs the
+#     single-device bucketed path, balanced spans, bounded overhead;
+#     emits BENCH_dist.json),
+#   * benchmarks/serve_bench.py (engine >= naive loop, cache hits, and the
+#     bucketed-vs-single-cap A/B that gates the flipped
+#     GraphEngineConfig.bucket_caps default; emits BENCH_serve.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -24,3 +31,5 @@ if [ "$#" -gt 0 ]; then
 fi
 python benchmarks/preprocess_bench.py
 python benchmarks/kernel_bench.py
+python benchmarks/dist_bench.py
+python benchmarks/serve_bench.py

@@ -23,6 +23,13 @@ from repro.core.formats import (
     csc_to_coo,
     csr_to_coo,
 )
+from repro.core.exec import (
+    PlanExecutor,
+    ShardedPlan,
+    ShardingDecision,
+    aggregate_sharded,
+    decide_sharding,
+)
 from repro.core.morton import morton_decode, morton_encode, morton_order, zcurve_tiles
 from repro.core.partition import (
     Partition,

@@ -158,7 +158,7 @@ def aggregate_scv_tiles(
 
 
 def aggregate_scv_plan(
-    p: Union[SCVPlan, SCVBucketedPlan],
+    p: "Union[SCVPlan, SCVBucketedPlan, ShardedPlan]",
     z: jnp.ndarray,
     *,
     backend: str = "auto",
@@ -166,18 +166,27 @@ def aggregate_scv_plan(
 ) -> jnp.ndarray:
     """SCV aggregation over a plan pytree — the jit-native path.
 
-    Accepts both the single-cap :class:`SCVPlan` and the nnz-bucketed
+    Accepts the single-cap :class:`SCVPlan`, the nnz-bucketed
     :class:`SCVBucketedPlan` (one kernel launch per capacity segment,
-    partial outputs summed).  Every array the computation reads is a
-    pytree leaf of ``p`` and every piece of static configuration (tile,
-    padded row count, bucket ladder, backend selection) comes from the
-    plan's aux data, so this function — and any caller threading plans
-    around, up to ``models.gnn.gnn_forward`` — can sit under one outer
+    partial outputs summed), and the mesh-placed
+    :class:`repro.core.exec.ShardedPlan` (the executor's shard_map
+    launch — one boundary ``psum``, feature slabs collective-free).
+    Every array the computation reads is a pytree leaf of ``p`` and every
+    piece of static configuration (tile, padded row count, bucket ladder,
+    placement mesh + decision, backend selection) comes from the plan's
+    aux data, so this function — and any caller threading plans around,
+    up to ``models.gnn.gnn_forward`` — can sit under one outer
     ``jax.jit`` with zero host round-trips per layer.
     """
     from repro.kernels.scv_spmm import ops as scv_ops  # local import: keep core light
     from repro.kernels.scv_spmm import ref as scv_ref
 
+    from repro.core.exec import ShardedPlan, aggregate_sharded
+
+    if isinstance(p, ShardedPlan):
+        return aggregate_sharded(
+            p, z, backend=backend, feature_block=feature_block
+        )
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if backend == "jnp":
@@ -195,7 +204,7 @@ def aggregate_scv_plan(
 # ---------------------------------------------------------------------------
 # dispatch
 # ---------------------------------------------------------------------------
-Format = Union[np.ndarray, jnp.ndarray, COOMatrix, CSRMatrix, CSCMatrix, BCSRMatrix, SCVMatrix, SCVTiles, SCVPlan, SCVBucketedPlan]
+Format = Union[np.ndarray, jnp.ndarray, COOMatrix, CSRMatrix, CSCMatrix, BCSRMatrix, SCVMatrix, SCVTiles, SCVPlan, SCVBucketedPlan, "ShardedPlan"]
 
 
 def aggregate(a: Format, z: jnp.ndarray, **kw: Any) -> jnp.ndarray:
@@ -221,7 +230,9 @@ def aggregate(a: Format, z: jnp.ndarray, **kw: Any) -> jnp.ndarray:
         return aggregate_scv_tiles(scv_to_tiles(a), z, **kw)
     if isinstance(a, SCVTiles):
         return aggregate_scv_tiles(a, z, **kw)
-    if isinstance(a, (SCVPlan, SCVBucketedPlan)):
+    from repro.core.exec import ShardedPlan
+
+    if isinstance(a, (SCVPlan, SCVBucketedPlan, ShardedPlan)):
         return aggregate_scv_plan(a, z, **kw)
     raise TypeError(f"unsupported adjacency format: {type(a)}")
 

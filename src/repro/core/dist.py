@@ -1,88 +1,76 @@
 """Distributed SCV aggregation over a device mesh (paper §V-G at scale).
 
+Compatibility façade over :mod:`repro.core.exec` — the executor owns
+device placement now (mesh axes, span splitting, the shard_map launch,
+the single boundary-PS ``psum``).  This module keeps the historical names:
+
+* :data:`DistributedGraph` — alias of :class:`repro.core.exec.ShardedPlan`
+  (the generalization: a registered pytree of per-segment sharded spans,
+  so nnz-bucketed plans distribute too).
+* :func:`distribute_plan` — tile-axis placement of an ``SCVPlan`` **or**
+  ``SCVBucketedPlan`` onto ``n_parts`` devices.
+* :func:`distribute_tiles` — host-object wrapper (lift to a plan, place).
+* :func:`aggregate_distributed` — execute a placed plan.
+
 The Z-Morton curve is cut into equal-nnz spans (core/partition.py); each
-device aggregates its span into a local PS buffer with the SCV kernel (or
-the jnp reference), and boundary block-rows shared between spans are
-merged with a single ``psum`` — the collective realization of the paper's
-shared-memory PS merge.  The curve's locality means each span touches a
-narrow band of Z rows and PS strips, so per-device traffic stays local
-even though the code below keeps the dense Z replicated (graph features
-are small next to LM weights; Z-sharding is a further lever, noted in
-DESIGN.md §5).
+device aggregates its span into a local PS buffer and boundary block-rows
+shared between spans are merged with a single ``psum`` — the collective
+realization of the paper's shared-memory PS merge.  The curve's locality
+means each span touches a narrow band of Z rows and PS strips, so
+per-device traffic stays local.  Z itself is replicated here (tile-axis
+placement); feature-axis (Z-)sharding and 2-D placement are the
+executor's other decisions — see ``core/exec.py`` / DESIGN.md §5.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-try:
-    from jax import shard_map
-except ImportError:  # older jax keeps it under experimental
-    from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.partition import Partition, shard_plan, split_equal_nnz
-from repro.core.scv import SCVPlan, SCVTiles, plan_from_tiles
+from repro.core.exec import (
+    PlanExecutor,
+    ShardedPlan,
+    ShardingDecision,
+    aggregate_sharded,
+)
+from repro.core.scv import SCVBucketedPlan, SCVPlan, SCVTiles, plan_from_tiles
 
-
-@dataclasses.dataclass
-class DistributedGraph:
-    """Tiles re-packed with a leading device axis for shard_map."""
-
-    arrays: dict  # each leaf: [n_devices, tiles_per_device, ...]
-    tile: int
-    n_rows_padded: int
-    n_rows: int
-    n_parts: int
-    imbalance: float
+#: The historical name: tiles re-packed with a leading device axis for
+#: shard_map.  Now the executor's ShardedPlan (per-segment spans, so
+#: bucketed plans distribute; feature/2-D placements use the same type).
+DistributedGraph = ShardedPlan
 
 
-def distribute_plan(plan: SCVPlan, n_parts: int) -> DistributedGraph:
-    """Split an SCVPlan pytree into P equal-nnz tile spans for shard_map.
+def distribute_plan(
+    plan: Union[SCVPlan, SCVBucketedPlan],
+    n_parts: int,
+    devices: Optional[tuple] = None,
+) -> ShardedPlan:
+    """Split a plan pytree into P equal-nnz tile spans for shard_map.
 
+    Accepts both the single-cap ``SCVPlan`` and the nnz-bucketed
+    ``SCVBucketedPlan`` (each capacity segment is cut into its own spans
+    along the same Z curve; all segments of one part land on one device).
     The span gather happens on device (``partition.shard_plan``); only the
     span boundaries are computed host-side from the nnz histogram.
+
+    Placement now happens here (the result carries its mesh), so
+    ``n_parts`` devices must exist — pass ``devices=`` or force host
+    devices (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    To inspect span balance without devices, use
+    ``partition.split_equal_nnz`` + ``load_imbalance`` directly.
     """
-    from repro.core.scv import SCVBucketedPlan
-
-    if isinstance(plan, SCVBucketedPlan):
-        raise TypeError(
-            "distribute_plan takes a single-cap SCVPlan; bucketed plans "
-            "shard per segment (core.partition.split_equal_nnz/shard_plan) "
-            "but the shard_map wiring for them is not built yet (ROADMAP)"
-        )
-    part = split_equal_nnz(plan, n_parts)
-    stacked = shard_plan(plan, part)
-    width = part.part_tiles.shape[1]
-
-    def dev(a):
-        return a.reshape((n_parts, width) + a.shape[1:])
-
-    arrays = {
-        "tile_row": dev(stacked.tile_row),
-        "tile_col": dev(stacked.tile_col),
-        "rows": dev(stacked.rows),
-        "cols": dev(stacked.cols),
-        "vals": dev(stacked.vals),
-        "nnz_in_tile": dev(stacked.nnz_in_tile),
-    }
-    from repro.core.partition import load_imbalance
-
-    return DistributedGraph(
-        arrays=arrays,
-        tile=plan.tile,
-        n_rows_padded=plan.padded_shape[0],
-        n_rows=plan.shape[0],
-        n_parts=n_parts,
-        imbalance=load_imbalance(part),
+    ex = PlanExecutor(devices=tuple(devices or jax.devices()[:n_parts]))
+    # kind="tiles" even for n_parts == 1 (a degenerate 1-span placement):
+    # callers get the uniform DistributedGraph interface either way
+    return ex.prepare(
+        plan, decision=ShardingDecision(kind="tiles", tile_parts=n_parts)
     )
 
 
-def distribute_tiles(tiles: SCVTiles, n_parts: int) -> DistributedGraph:
-    """Host-object compatibility wrapper: lift to a plan pytree and shard
+def distribute_tiles(tiles: SCVTiles, n_parts: int) -> ShardedPlan:
+    """Host-object compatibility wrapper: lift to a plan pytree and place
     that.  Coverage dummies are unnecessary here — the per-span reference
     kernel (segment_sum) zero-defines unvisited rows on its own."""
     return distribute_plan(
@@ -91,33 +79,24 @@ def distribute_tiles(tiles: SCVTiles, n_parts: int) -> DistributedGraph:
 
 
 def aggregate_distributed(
-    g: DistributedGraph, z: jnp.ndarray, mesh: Mesh, axis: str = "data"
+    g: ShardedPlan,
+    z: jnp.ndarray,
+    mesh=None,
+    axis: str = "tiles",
+    *,
+    backend: str = "jnp",
 ) -> jnp.ndarray:
-    """out = Â Z with the tile spans sharded over ``axis`` of ``mesh``.
+    """out = Â Z over a placed plan (one shard_map, one boundary ``psum``).
 
-    Per-device partial PS buffers are psum-merged (one collective per
-    aggregation — the paper's end-of-pass merge, §V-G).
+    ``mesh`` / ``axis`` are legacy parameters: the placement now lives in
+    the plan itself (``g.mesh``, axes ``("tiles", "features")``).  A mesh
+    argument is accepted for source compatibility but must match the
+    plan's device count.
     """
-    from repro.kernels.scv_spmm.ref import scv_spmm_reference
-
-    n_rows_p = g.n_rows_padded
-    tile = g.tile
-
-    def local(arr, z_full):
-        out = scv_spmm_reference(
-            arr["tile_row"][0], arr["tile_col"][0], arr["rows"][0],
-            arr["cols"][0], arr["vals"][0], z_full,
-            tile=tile, n_rows=n_rows_p, nnz_in_tile=arr["nnz_in_tile"][0],
+    if mesh is not None and mesh.devices.size != g.mesh.devices.size:
+        raise ValueError(
+            f"mesh has {mesh.devices.size} devices but the plan was placed "
+            f"on {g.mesh.devices.size}; re-place with distribute_plan"
         )
-        return jax.lax.psum(out, axis)[None]
-
-    specs_in = jax.tree.map(lambda _: P(axis), g.arrays)
-    fn = shard_map(
-        partial(local),
-        mesh=mesh,
-        in_specs=(specs_in, P()),
-        out_specs=P(axis),
-    )
-    out = fn(g.arrays, z)
-    # every shard now holds the merged PS; take shard 0's copy
-    return out[0, : g.n_rows]
+    del axis  # the plan's own axis names apply
+    return aggregate_sharded(g, z, backend=backend)

@@ -120,7 +120,7 @@ def shard_plan(
 
     The result is still one ``SCVPlan`` whose leaves have leading dim
     ``P * tiles_per_part`` — reshape to ``(P, tiles_per_part, ...)`` for
-    ``shard_map`` (``core.dist.distribute_plan`` does exactly that).  The
+    ``shard_map`` (``core.exec.PlanExecutor.prepare`` does exactly that).  The
     gather runs on device; the host only computes the index vector, so the
     tiles never round-trip back to numpy the way ``shard_tiles`` requires.
     """
@@ -159,14 +159,30 @@ def shard_plan(
     )
 
 
-def load_imbalance(part: Union[Partition, tuple[Partition, ...]]) -> float:
+def nnz_imbalance(per_part: np.ndarray) -> float:
+    """max/mean ratio of a per-part nnz vector (1.0 = perfect balance;
+    empty or all-zero input reports 1.0).  The one definition shared by
+    ``load_imbalance`` and ``core.exec.ShardedPlan``."""
+    per_part = np.asarray(per_part)
+    mean = per_part.mean() if len(per_part) else 0.0
+    return float(per_part.max() / mean) if mean else 1.0
+
+
+def load_imbalance(
+    part: Union[Partition, tuple[Partition, ...]],
+    per_segment: bool = False,
+) -> Union[float, tuple[float, ...]]:
     """max/mean nnz ratio — 1.0 is perfect balance.  The paper's fine-grain
     claim is that this stays near 1 even for power-law graphs.  For a
     bucketed plan's partition tuple the per-part nnz is summed across
-    segments (all segments of one part run on the same device)."""
+    segments (all segments of one part run on the same device);
+    ``per_segment=True`` instead reports one ratio per capacity segment —
+    the breakdown that matters when one bucket's hub tiles skew a span
+    even though the flattened aggregate looks balanced."""
     if isinstance(part, tuple):
-        per_part = sum(p.nnz_per_part for p in part)
-        mean = per_part.mean() if len(per_part) else 0.0
-        return float(per_part.max() / mean) if mean else 1.0
-    mean = part.nnz_per_part.mean() if part.n_parts else 0.0
-    return float(part.nnz_per_part.max() / mean) if mean else 1.0
+        if per_segment:
+            return tuple(load_imbalance(p) for p in part)
+        return nnz_imbalance(sum(p.nnz_per_part for p in part))
+    if per_segment:
+        return (load_imbalance(part),)
+    return nnz_imbalance(part.nnz_per_part)

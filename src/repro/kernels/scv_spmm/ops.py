@@ -55,6 +55,13 @@ def ensure_row_coverage(
     )
 
 
+def _feature_block_for(f: int, feature_block: int) -> int:
+    """Clamp the feature block to the lane-padded (128-multiple) feature
+    width — the one clamp rule shared by ``scv_spmm`` and
+    ``scv_spmm_plan`` so a pre-padded Z always matches the inner kernel."""
+    return min(feature_block, -(-f // 128) * 128)
+
+
 def _pad_z(z: jnp.ndarray, tile: int, feature_block: int) -> jnp.ndarray:
     n, f = z.shape
     np_ = -(-n // tile) * tile
@@ -156,7 +163,7 @@ def scv_spmm(
     if tile_row.shape[0] == 0:
         return jnp.zeros((n_rows, z.shape[1]), jnp.float32)
     f_orig = z.shape[1]
-    feature_block = min(feature_block, -(-f_orig // 128) * 128)
+    feature_block = _feature_block_for(f_orig, feature_block)
     zp = _pad_z(z, tile, feature_block)
     if nnz_in_tile is None:
         # infer the structural padding suffix: without a mask, d/dvals
@@ -201,21 +208,31 @@ def scv_spmm_plan(
     the arrays, so callers stay jit-able.  A bucketed plan runs one kernel
     launch per capacity segment; each launch covers every PS block-row
     (per-segment coverage dummies), so the partial outputs are defined
-    everywhere and sum to the full aggregation.
+    everywhere and sum to the full aggregation.  Z is padded **once** for
+    all segments (same tile, same feature_block — per-launch re-padding
+    would be redundant work in eager mode).
+
+    Under the executor's feature-axis sharding (``core.exec``), ``z`` is a
+    device-local ``Z[:, f0:f1]`` slab: the kernel's feature-block grid
+    axis then simply runs over fewer blocks — the mesh mapping happens at
+    the ``shard_map`` layer, the kernel is unchanged.
     """
     # a bare SCVPlan is a 1-tuple; SCVBucketedPlan guarantees >= 1 segment
     segments = getattr(plan, "segments", (plan,))
+    f_orig = z.shape[1]
+    fb = _feature_block_for(f_orig, feature_block)
+    zp = _pad_z(z, segments[0].tile, fb)
     out = None
     for seg in segments:
         part = scv_spmm(
-            seg.tile_row, seg.tile_col, seg.rows, seg.cols, seg.vals, z,
+            seg.tile_row, seg.tile_col, seg.rows, seg.cols, seg.vals, zp,
             tile=seg.tile, n_rows=seg.padded_shape[0],
             nnz_in_tile=seg.nnz_in_tile,
-            feature_block=feature_block, interpret=interpret,
+            feature_block=fb, interpret=interpret,
             body=body, chunk=chunk, dense_threshold=dense_threshold,
         )
         out = part if out is None else out + part
-    return out
+    return out[:, :f_orig]
 
 
 def scv_spmm_reference(*args, **kw):

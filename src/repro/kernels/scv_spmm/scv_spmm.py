@@ -86,7 +86,8 @@ def _kernel_scalar(
         out_ref[pl.ds(r, 1), :] += v * zrow
         return 0
 
-    # NB: `unroll` requires statically-known bounds; nnz is dynamic.
+    # No `unroll=`: jax (0.4.x and current) raises ValueError for
+    # unrolled fori_loop with traced bounds, and nnz is prefetched data.
     jax.lax.fori_loop(0, nnz, body, 0)
 
 

@@ -6,14 +6,24 @@ this is the paper's technique as a first-class framework feature, and it
 is *trainable*: edge weights flow through the kernel's custom VJP (the
 paper's future-work item (i)).
 
-``Graph`` and ``BatchedGraph`` are registered jax pytrees wrapping an
-``SCVPlan``: device arrays are leaves, counts/offsets are static aux data.
-``gnn_forward`` and ``gnn_forward_batched`` therefore run under a single
-outer ``jax.jit`` (``gnn_forward_jit`` is the prebuilt wrapper) — every
-layer's combination *and* aggregation compiles into one XLA program, with
-retraces bounded by the padding buckets because jit keys only on leaf
-shapes + static aux.  Per-edge attention (GAT) re-weights the plan's tile
-values through its ``perm`` leaf.
+``Graph`` and ``BatchedGraph`` are registered jax pytrees wrapping a plan
+(single-cap ``SCVPlan``, nnz-bucketed ``SCVBucketedPlan``, or a
+mesh-placed ``core.exec.ShardedPlan``): device arrays are leaves,
+counts/offsets are static aux data.  ``gnn_forward`` and
+``gnn_forward_batched`` therefore run under a single outer ``jax.jit``
+(``gnn_forward_jit`` is the prebuilt wrapper) — every layer's combination
+*and* aggregation compiles into one XLA program, with retraces bounded by
+the padding buckets because jit keys only on leaf shapes + static aux.
+Per-edge attention (GAT) re-weights the plan's tile values through its
+``perm`` leaf.
+
+Device placement is the plan's business, not the model's:
+``core.exec.PlanExecutor.prepare_graph`` swaps the plan for a
+``ShardedPlan`` (mesh + sharding decision in its static aux), and the
+same ``gnn_forward`` then compiles to a multi-device program — the
+``shard_map`` aggregation launches (one boundary ``psum`` over the
+``"tiles"`` axis, feature slabs collective-free) sit inside the one XLA
+program like any other op.
 """
 from __future__ import annotations
 
@@ -49,7 +59,7 @@ class Graph:
     """
 
     n_nodes: int
-    plan: "SCVPlan | SCVBucketedPlan"
+    plan: "SCVPlan | SCVBucketedPlan | ShardedPlan"
     rows: Optional[jnp.ndarray] = None  # i32[E] (normalized adjacency entries)
     cols: Optional[jnp.ndarray] = None
     vals: Optional[jnp.ndarray] = None  # f32[E] normalized weights (GCN) or 1s
@@ -112,11 +122,15 @@ def build_graph(
 
 
 def _agg(g: Graph, z, edge_vals=None, backend="jnp"):
-    """Aggregate with optional per-edge re-weighting (GAT)."""
+    """Aggregate with optional per-edge re-weighting (GAT).
+
+    ``aggregate_scv_plan`` dispatches on the plan kind — a mesh-placed
+    ``ShardedPlan`` runs the executor's shard_map launch; the layers never
+    know where the plan lives."""
     plan = g.plan
     if edge_vals is not None:
         # perm == -1 (padding slot) gathers an appended zero; bucketed
-        # plans re-gather per capacity segment
+        # and sharded plans re-gather per capacity segment
         plan = plan.reweighted(edge_vals)
     return aggregate_scv_plan(plan, z, backend=backend)[: g.n_nodes]
 

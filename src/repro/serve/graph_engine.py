@@ -32,8 +32,16 @@ Three mechanisms make this a serving system rather than a loop:
    a cache hit hands jit a ready device pytree and the whole multi-layer
    forward is one XLA program.
 
-The engine is synchronous and single-host (like ``ServeEngine``); the
-launch/ layer owns meshes and process fan-out.
+4. **Multi-device routing** — composites whose padded node count or total
+   nnz exceed the ``GraphEngineConfig`` thresholds are placed by a
+   ``core.exec.PlanExecutor`` (tile-span / feature-axis / 2-D sharding
+   from workload numbers and the device pool) and execute through the
+   same jitted forward — a ``ShardedPlan`` is just another plan kind.
+   The sharding decision is part of the composite cache key, so hot
+   oversized batches reuse their sharded layout.
+
+The engine is synchronous and single-host-process (like ``ServeEngine``);
+the launch/ layer owns process fan-out.
 """
 from __future__ import annotations
 
@@ -45,6 +53,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.exec import ShardedPlan
 from repro.core.formats import COOMatrix
 from repro.core.scv import SCVBucketedPlan, SCVPlan
 from repro.models.gnn import (
@@ -77,19 +86,30 @@ class GraphEngineConfig:
     max_batch_graphs: int = 16
     max_batch_nodes: int = 4096
     tile: int = 64
-    cap: int = 64  # fixed per-tile entry capacity (static shapes across plans)
+    cap: int = 64  # per-tile entry capacity when bucket_caps is disabled
     # nnz-bucketed plans: a fixed ascending capacity ladder shared by every
     # member plan (so composites fuse segment-by-segment and jit traces are
-    # shared across batches).  Empty tuple = legacy single-cap plans; when
-    # set, the ladder supersedes ``cap`` (heavy tiles chain-split at
-    # ``bucket_caps[-1]``).
-    bucket_caps: tuple[int, ...] = ()
+    # shared across batches).  ON by default — the serve_bench A/B
+    # (BENCH_serve.json) gates bucketed >= single-cap throughput; the 3-deep
+    # ladder measured fastest there (a 4th bucket adds a launch + a full
+    # set of per-segment coverage dummies at its cap for little padding
+    # gain).  Empty tuple selects the legacy single-cap plans (``cap``);
+    # when the ladder is set it supersedes ``cap`` (heavy tiles chain-split
+    # at ``bucket_caps[-1]``).
+    bucket_caps: tuple[int, ...] = (8, 32, 128)
     node_buckets: tuple[int, ...] = (256, 512, 1024, 2048, 4096)
     cache_entries: int = 256
     cache_bytes: int = 256 << 20
     plan_ttl_s: Optional[float] = None  # expire cached plans after this age
     completed_history: int = 1024  # recent requests kept for inspection
     max_retries: int = 1  # failed waves a request survives before ejection
+    # multi-device routing (core.exec.PlanExecutor): a composite whose
+    # padded node count exceeds shard_nodes_threshold OR whose total nnz
+    # exceeds shard_nnz_threshold executes on the executor's sharded path.
+    # None disables the corresponding trigger; both None = single-device
+    # engine even when an executor is attached.
+    shard_nodes_threshold: Optional[int] = None
+    shard_nnz_threshold: Optional[int] = None
 
     def __post_init__(self):
         for field in ("max_batch_graphs", "max_batch_nodes", "tile", "cap"):
@@ -101,6 +121,10 @@ class GraphEngineConfig:
                 raise ValueError(
                     f"bucket_caps must be ascending distinct positives, got {caps}"
                 )
+        for field in ("shard_nodes_threshold", "shard_nnz_threshold"):
+            v = getattr(self, field)
+            if v is not None and v <= 0:
+                raise ValueError(f"{field} must be positive (or None)")
         if self.completed_history < 0:
             raise ValueError("completed_history must be >= 0")
         if self.node_buckets and self.max_batch_nodes > max(self.node_buckets):
@@ -342,9 +366,18 @@ class GraphServeEngine:
         self,
         models: dict[str, tuple],
         cfg: Optional[GraphEngineConfig] = None,
+        executor: Optional["PlanExecutor"] = None,
     ):
         self.models = models
         self.cfg = cfg = cfg if cfg is not None else GraphEngineConfig()
+        if executor is None and (
+            cfg.shard_nodes_threshold is not None
+            or cfg.shard_nnz_threshold is not None
+        ):
+            from repro.core.exec import PlanExecutor
+
+            executor = PlanExecutor()  # all local devices
+        self.executor = executor
         self.plan_cache = PlanCache(
             max_entries=cfg.cache_entries,
             max_bytes=cfg.cache_bytes,
@@ -359,6 +392,7 @@ class GraphServeEngine:
         self.n_failed = 0
         self.last_completed: list[GraphRequest] = []  # from the latest run()
         self.n_batches = 0  # == forward launches (one per batch)
+        self.n_sharded_batches = 0  # waves routed through the executor
         self.serve_seconds = 0.0
 
     def submit(self, req: GraphRequest) -> None:
@@ -424,6 +458,31 @@ class GraphServeEngine:
         return batch
 
     # -- plans -------------------------------------------------------------
+    def _shard_decision(self, batch, bucket: int, mcfg):
+        """Placement decision for a composite, or None for single-device.
+
+        A composite goes multi-device when its padded node count or total
+        nnz exceeds the configured thresholds.  The decision is a pure
+        function of (workload numbers, executor pool), so equal batches
+        always reach the same placement — which is what lets it live in
+        the composite cache key."""
+        if self.executor is None:
+            return None
+        nnz = sum(r.adj.nnz for r in batch)
+        over = (
+            self.cfg.shard_nodes_threshold is not None
+            and bucket > self.cfg.shard_nodes_threshold
+        ) or (
+            self.cfg.shard_nnz_threshold is not None
+            and nnz > self.cfg.shard_nnz_threshold
+        )
+        if not over:
+            return None
+        # the narrowest width any layer aggregates bounds useful Z-sharding
+        n_feat = min(mcfg.d_in, mcfg.d_hidden, mcfg.n_classes)
+        decision = self.executor.decide_for(nnz, n_feat)
+        return None if decision.kind == "replicated" else decision
+
     def _batch_plan(self, batch: list[GraphRequest]) -> BatchedGraph:
         """Composite plan for a batch.  The composite key is derived from
         content hashes alone, so a hot batch is resolved before any member
@@ -435,7 +494,13 @@ class GraphServeEngine:
         model-*kind* (edge-needing or not), deliberately not the model
         name, so same-kind models still share composite plans.  Member
         plans always carry edges (one representation serves every kind)
-        and stay kind-agnostic."""
+        and stay kind-agnostic.
+
+        The salt also carries the sharding decision (``shard=``): an
+        over-threshold composite is cached *placed* (its plan already a
+        ``ShardedPlan`` on the executor's mesh), so a hot oversized batch
+        reuses its sharded layout with zero placement work — and the same
+        members under a different executor/threshold config never alias."""
         T, cap = self.cfg.tile, self.cfg.cap
         bucket_caps = tuple(self.cfg.bucket_caps) or None
         _, mcfg = self.models[batch[0].model]
@@ -447,10 +512,12 @@ class GraphServeEngine:
         member_keys = [coo_content_key(r.adj, tile=T, cap=cap_sig) for r in batch]
         aligned = sum(-(-r.adj.shape[0] // T) * T for r in batch)
         bucket = _bucket_nodes(aligned, self.cfg.node_buckets, T)
+        decision = self._shard_decision(batch, bucket, mcfg)
         ckey = combine_keys(
             member_keys,
             salt=f"batch;bucket={bucket};tile={T};caps={cap_sig};"
-            f"edges={int(with_edges)};",
+            f"edges={int(with_edges)};"
+            f"shard={decision.signature if decision else 'none'};",
         )
 
         def build() -> BatchedGraph:
@@ -465,7 +532,15 @@ class GraphServeEngine:
                 )
                 for k, r in zip(member_keys, batch)
             ]
-            return assemble_batched_graph(plans, T, bucket, with_edges=with_edges)
+            bg = assemble_batched_graph(plans, T, bucket, with_edges=with_edges)
+            if decision is not None:
+                bg = dataclasses.replace(
+                    bg,
+                    graph=self.executor.prepare_graph(
+                        bg.graph, decision=decision
+                    ),
+                )
+            return bg
 
         return self.plan_cache.get_or_build(ckey, build)
 
@@ -515,6 +590,8 @@ class GraphServeEngine:
                 self.serve_seconds += time.perf_counter() - t0
                 raise
             self.n_batches += 1
+            if isinstance(bg.graph.plan, ShardedPlan):
+                self.n_sharded_batches += 1
             for r, o in zip(batch, outs):
                 r.out = o
                 r.done = True
@@ -528,6 +605,7 @@ class GraphServeEngine:
         s = self.plan_cache.stats
         return {
             "batches": self.n_batches,
+            "sharded_batches": self.n_sharded_batches,
             "launches": self.n_batches,  # one forward launch per batch
             "completed": self.n_completed,
             "failed": self.n_failed,
