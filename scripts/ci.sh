@@ -25,6 +25,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+scripts/lint.sh
 python -m pytest -q -m "not slow" "$@"
 if [ "$#" -gt 0 ]; then
   python -m pytest -q tests/test_scv_plan.py -k "jit" --no-header

@@ -1,0 +1,660 @@
+"""scvcheck leg 1: the plan-invariant verifier (DESIGN.md §6).
+
+SCV-GNN's speedup story rests on structural invariants the rest of the
+stack *assumes* but never checks: the tile schedule, row coverage,
+per-tile capacity, perm bijectivity, the bucket ladder and the sharded
+span layout.  Four layers transform those invariants (plan -> bucketed
+plan -> sharded plan -> serving composite); any silent corruption turns
+into wrong aggregations, not crashes — the dominant correctness risk the
+GNN-acceleration surveys flag for sparse accelerator stacks.
+
+``validate_plan`` takes any plan-like object (:class:`SCVTiles`,
+:class:`SCVPlan`, :class:`SCVBucketedPlan`, ``core.exec.ShardedPlan``,
+or a serve composite via ``models.gnn.Graph`` / ``BatchedGraph``) and
+runs the full invariant chain, returning a machine-readable
+:class:`ValidationReport` — per-invariant pass/fail plus the offending
+tile / segment / span indices.  Everything is pure, host-side numpy:
+leaves are read back once and no jit trace is touched, so the checker is
+safe to call from tests, from the serving admission boundary
+(``GraphServeEngine`` debug mode) and from future delta-plan maintenance.
+
+The invariant chain (DESIGN.md §6 states the contract prose-side):
+
+* **shape-aux** — leaf shapes/dtypes consistent with the plan's static
+  aux (``[nt, cap]`` entry arrays, int32 indices, ascending distinct
+  segment caps, segments agreeing on tile/shape/order).
+* **bounds** — local rows/cols in ``[0, T)``; tile coordinates inside
+  the padded block grid.
+* **cap** — ``0 <= nnz_in_tile <= cap`` for every tile.
+* **packing** — entries front-packed: every slot past ``nnz_in_tile``
+  is structural padding (``val == 0``, ``row == col == 0``,
+  ``perm == -1``).  The kernel relies on padding adding zero.
+* **order** — the schedule invariant: restricted to real (``nnz > 0``)
+  tiles, ``tile_row`` is non-decreasing and, within a block-row, the
+  Z-Morton key (equivalently ``tile_col``) is non-decreasing.
+* **coverage** — every PS block-row appears in ``tile_row`` (coverage
+  dummies present wherever no real tile visits a row), and each
+  block-row forms ONE contiguous run of the schedule: a second run for
+  an already-visited row would make the Pallas kernel re-zero a PS
+  strip and wipe real output.
+* **perm** — the perm leaf is a bijection over the real (non-padding)
+  slots: real slots carry distinct source-entry ids covering
+  ``0 .. nnz-1`` exactly once (unioned across segments / spans),
+  padding slots carry ``-1``.
+* **ladder** — bucketed segments are disjoint and complete w.r.t. the
+  source tiles: segment ``j`` holds exactly the real tiles with
+  ``caps[j-1] < nnz <= caps[j]`` (zero-nnz coverage tiles may live in
+  any segment — each per-bucket launch covers its own output).
+* **shard-span** — a sharded plan's spans reassemble to the unsharded
+  plan: concatenating each segment's spans (dropping zero-nnz span
+  padding) yields the same entry multiset, and the per-span schedules
+  still satisfy order/coverage-contiguity locally.
+* **reassembly** (optional, ``coo=`` given) — the plan's real entries
+  byte-match the source COO (same (row, col, val) multiset).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+import numpy as np
+
+from repro.core.formats import COOMatrix
+from repro.core.scv import SCVBucketedPlan, SCVPlan, SCVTiles
+
+
+# ---------------------------------------------------------------------------
+# report types
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class InvariantResult:
+    """One invariant checked on one plan / segment / span."""
+
+    invariant: str  # "order" | "coverage" | "cap" | "packing" | ...
+    ok: bool
+    segment: Optional[int] = None  # capacity-bucket index, if any
+    part: Optional[int] = None  # sharded span index, if any
+    offending: tuple[int, ...] = ()  # tile (or segment) indices at fault
+    detail: str = ""
+
+    def where(self) -> str:
+        loc = []
+        if self.segment is not None:
+            loc.append(f"segment {self.segment}")
+        if self.part is not None:
+            loc.append(f"span {self.part}")
+        return ", ".join(loc) or "plan"
+
+
+@dataclasses.dataclass(frozen=True)
+class ValidationReport:
+    """Machine-readable outcome of :func:`validate_plan`."""
+
+    kind: str  # "tiles" | "plan" | "bucketed" | "sharded" | "graph" | ...
+    checks: tuple[InvariantResult, ...]
+
+    @property
+    def ok(self) -> bool:
+        return all(c.ok for c in self.checks)
+
+    @property
+    def failures(self) -> tuple[InvariantResult, ...]:
+        return tuple(c for c in self.checks if not c.ok)
+
+    def failed(self, invariant: str) -> tuple[InvariantResult, ...]:
+        return tuple(c for c in self.failures if c.invariant == invariant)
+
+    def summary(self) -> str:
+        if self.ok:
+            return f"{self.kind}: all {len(self.checks)} invariant checks passed"
+        lines = [f"{self.kind}: {len(self.failures)} invariant violation(s)"]
+        for c in self.failures:
+            off = f" tiles={list(c.offending[:8])}" if c.offending else ""
+            lines.append(f"  {c.invariant} @ {c.where()}: {c.detail}{off}")
+        return "\n".join(lines)
+
+    def raise_if_failed(self) -> "ValidationReport":
+        if not self.ok:
+            raise PlanInvariantError(self)
+        return self
+
+
+class PlanInvariantError(ValueError):
+    """Raised by ``ValidationReport.raise_if_failed`` (admission boundary)."""
+
+    def __init__(self, report: ValidationReport):
+        super().__init__(report.summary())
+        self.report = report
+
+
+# ---------------------------------------------------------------------------
+# COO admission checks (serving boundary)
+# ---------------------------------------------------------------------------
+def check_coo(a: COOMatrix, square: bool = False) -> None:
+    """Reject malformed client COO with a clear ``ValueError``.
+
+    Out-of-range / negative indices would shift into a *neighbor's* block
+    of a serving composite and silently corrupt co-batched outputs — the
+    failure mode this admission hook exists to make loud.
+    """
+    m, n = a.shape
+    if m < 0 or n < 0:
+        raise ValueError(f"COO shape must be non-negative, got {a.shape}")
+    if square and m != n:
+        raise ValueError(f"adjacency must be square, got {a.shape}")
+    if not (len(a.rows) == len(a.cols) == len(a.vals)):
+        raise ValueError(
+            f"COO arrays disagree on nnz: rows={len(a.rows)} "
+            f"cols={len(a.cols)} vals={len(a.vals)}"
+        )
+    if a.nnz == 0:
+        return
+    rmin, rmax = int(a.rows.min()), int(a.rows.max())
+    cmin, cmax = int(a.cols.min()), int(a.cols.max())
+    if rmin < 0 or cmin < 0:
+        raise ValueError(
+            f"COO indices must be non-negative (rows >= {rmin}, cols >= {cmin})"
+        )
+    if rmax >= m or cmax >= n:
+        raise ValueError(
+            f"COO indices out of range for shape {a.shape}: "
+            f"max row {rmax}, max col {cmax}"
+        )
+    if not np.all(np.isfinite(a.vals)):
+        bad = np.flatnonzero(~np.isfinite(a.vals))
+        raise ValueError(
+            f"COO values must be finite; {len(bad)} non-finite entries "
+            f"(first at {int(bad[0])})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# per-plan invariant checks (pure numpy over read-back leaves)
+# ---------------------------------------------------------------------------
+def _np(a) -> np.ndarray:
+    return np.asarray(a)
+
+
+@dataclasses.dataclass(frozen=True)
+class _PlanView:
+    """Host-side snapshot of one plan's arrays (works for SCVTiles too)."""
+
+    tile_row: np.ndarray
+    tile_col: np.ndarray
+    rows: np.ndarray
+    cols: np.ndarray
+    vals: np.ndarray
+    nnz_in_tile: np.ndarray
+    perm: Optional[np.ndarray]
+    tile: int
+    cap: int
+    shape: tuple[int, int]
+    order: str
+
+    @classmethod
+    def of(cls, p: Union[SCVPlan, SCVTiles]) -> "_PlanView":
+        return cls(
+            tile_row=_np(p.tile_row).astype(np.int64),
+            tile_col=_np(p.tile_col).astype(np.int64),
+            rows=_np(p.rows),
+            cols=_np(p.cols),
+            vals=_np(p.vals),
+            nnz_in_tile=_np(p.nnz_in_tile).astype(np.int64),
+            perm=None if p.perm is None else _np(p.perm).astype(np.int64),
+            tile=int(p.tile),
+            cap=int(p.cap),
+            shape=tuple(p.shape),
+            order=p.order,
+        )
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.tile_row.shape[0])
+
+    @property
+    def n_row_blocks(self) -> int:
+        return -(-self.shape[0] // self.tile)
+
+    @property
+    def n_col_blocks(self) -> int:
+        return -(-self.shape[1] // self.tile)
+
+
+def _check_shape_aux(v: _PlanView, loc: dict) -> list[InvariantResult]:
+    out = []
+    nt, cap = v.n_tiles, v.cap
+    bad = []
+    for name, arr, want in (
+        ("tile_row", v.tile_row, (nt,)),
+        ("tile_col", v.tile_col, (nt,)),
+        ("nnz_in_tile", v.nnz_in_tile, (nt,)),
+        ("rows", v.rows, (nt, cap)),
+        ("cols", v.cols, (nt, cap)),
+        ("vals", v.vals, (nt, cap)),
+    ):
+        if tuple(arr.shape) != want:
+            bad.append(f"{name}.shape={tuple(arr.shape)} != {want}")
+    if v.perm is not None and tuple(v.perm.shape) != (nt, cap):
+        bad.append(f"perm.shape={tuple(v.perm.shape)} != {(nt, cap)}")
+    for name, arr in (("rows", v.rows), ("cols", v.cols)):
+        if not np.issubdtype(arr.dtype, np.integer):
+            bad.append(f"{name}.dtype={arr.dtype} not integer")
+    if not np.issubdtype(v.vals.dtype, np.floating):
+        bad.append(f"vals.dtype={v.vals.dtype} not floating")
+    if v.tile <= 0 or v.cap <= 0:
+        bad.append(f"tile={v.tile}, cap={v.cap} must be positive")
+    out.append(
+        InvariantResult(
+            "shape-aux", not bad, detail="; ".join(bad), **loc
+        )
+    )
+    return out
+
+
+def _check_bounds(v: _PlanView, loc: dict) -> list[InvariantResult]:
+    T = v.tile
+    slot = np.arange(v.cap)[None, :]
+    real = slot < v.nnz_in_tile[:, None]
+    bad_local = np.flatnonzero(
+        ((v.rows < 0) | (v.rows >= T) | (v.cols < 0) | (v.cols >= T)) & real
+        if real.size else np.zeros(0, bool)
+    )
+    bad_tiles = np.unique(bad_local // max(v.cap, 1)) if bad_local.size else []
+    bad_coord = np.flatnonzero(
+        (v.tile_row < 0)
+        | (v.tile_row >= v.n_row_blocks)
+        | (v.tile_col < 0)
+        | (v.tile_col >= v.n_col_blocks)
+    )
+    off = tuple(int(i) for i in np.union1d(bad_tiles, bad_coord))
+    detail = ""
+    if len(bad_tiles):
+        detail += f"local row/col outside [0, {T}) in {len(bad_tiles)} tile(s); "
+    if len(bad_coord):
+        detail += (
+            f"tile coordinates outside {v.n_row_blocks}x{v.n_col_blocks} "
+            f"block grid in {len(bad_coord)} tile(s)"
+        )
+    return [InvariantResult("bounds", not off, offending=off, detail=detail, **loc)]
+
+
+def _check_cap(v: _PlanView, loc: dict) -> list[InvariantResult]:
+    bad = np.flatnonzero((v.nnz_in_tile < 0) | (v.nnz_in_tile > v.cap))
+    detail = (
+        f"nnz_in_tile outside [0, cap={v.cap}] "
+        f"(worst: {int(v.nnz_in_tile[bad[0]])} at tile {int(bad[0])})"
+        if bad.size
+        else ""
+    )
+    return [
+        InvariantResult(
+            "cap", not bad.size, offending=tuple(int(i) for i in bad),
+            detail=detail, **loc,
+        )
+    ]
+
+
+def _check_packing(v: _PlanView, loc: dict) -> list[InvariantResult]:
+    nnz = np.clip(v.nnz_in_tile, 0, v.cap)
+    slot = np.arange(v.cap)[None, :]
+    pad = slot >= nnz[:, None]
+    dirty = pad & ((v.vals != 0) | (v.rows != 0) | (v.cols != 0))
+    if v.perm is not None:
+        dirty |= pad & (v.perm != -1)
+        dirty |= (~pad) & (v.perm < 0)  # real slots must carry a source id
+    bad = np.unique(np.nonzero(dirty)[0]) if dirty.size else np.zeros(0, np.int64)
+    detail = (
+        f"{int(dirty.sum())} padding slot(s) not structurally zero "
+        "(val==0, row==col==0, perm==-1) or real slot(s) with perm < 0"
+        if bad.size
+        else ""
+    )
+    return [
+        InvariantResult(
+            "packing", not bad.size, offending=tuple(int(i) for i in bad),
+            detail=detail, **loc,
+        )
+    ]
+
+
+def _check_order(v: _PlanView, loc: dict) -> list[InvariantResult]:
+    """Schedule invariant over real tiles: non-decreasing block-row; inside
+    a block-row, non-decreasing Z-Morton key (degenerates to ascending
+    tile_col for both supported orders)."""
+    real = np.flatnonzero(v.nnz_in_tile > 0)
+    r, c = v.tile_row[real], v.tile_col[real]
+    bad = []
+    step = np.flatnonzero(np.diff(r) < 0)
+    bad.extend(real[i + 1] for i in step)
+    # within a block-row the Z-Morton key is monotone in tile_col (row bits
+    # fixed), so ascending col IS ascending Z — one comparison covers both
+    # supported orders
+    back = np.flatnonzero((np.diff(r) == 0) & (np.diff(c) < 0))
+    bad.extend(real[i + 1] for i in back)
+    off = tuple(sorted(int(i) for i in set(bad)))
+    detail = (
+        f"{len(off)} real tile(s) break the (block-row, Z) schedule order"
+        if off
+        else ""
+    )
+    return [InvariantResult("order", not off, offending=off, detail=detail, **loc)]
+
+
+def _check_coverage(
+    v: _PlanView, loc: dict, require_full: bool = True
+) -> list[InvariantResult]:
+    """Row coverage + run contiguity.
+
+    * full coverage: every block-row of the padded grid appears in
+      ``tile_row`` (skipped for sharded spans — a span covers only the
+      rows its tiles visit);
+    * contiguity: each block-row forms one contiguous run of the
+      schedule — a second, later run would make the Pallas kernel
+      re-zero an already-written PS strip.
+    """
+    out = []
+    if require_full:
+        missing = np.setdiff1d(
+            np.arange(v.n_row_blocks, dtype=np.int64), np.unique(v.tile_row)
+        )
+        out.append(
+            InvariantResult(
+                "coverage",
+                not missing.size,
+                offending=tuple(int(i) for i in missing),
+                detail=(
+                    f"{missing.size} block-row(s) have no tile (coverage "
+                    "dummy missing) — Pallas output undefined there"
+                    if missing.size
+                    else ""
+                ),
+                **loc,
+            )
+        )
+    # run contiguity over ALL tiles (dummies included)
+    r = v.tile_row
+    if r.size:
+        change = np.r_[True, r[1:] != r[:-1]]
+        first_seen: dict[int, int] = {}
+        bad = []
+        for i in np.flatnonzero(change):
+            row = int(r[i])
+            if row in first_seen:
+                bad.append(int(i))
+            else:
+                first_seen[row] = int(i)
+        out.append(
+            InvariantResult(
+                "coverage-contiguity",
+                not bad,
+                offending=tuple(bad),
+                detail=(
+                    f"{len(bad)} tile(s) start a second run for an already-"
+                    "visited block-row (kernel would re-zero its PS strip)"
+                    if bad
+                    else ""
+                ),
+                **loc,
+            )
+        )
+    else:
+        out.append(InvariantResult("coverage-contiguity", True, **loc))
+    return out
+
+
+def _real_perm_values(v: _PlanView) -> np.ndarray:
+    slot = np.arange(v.cap)[None, :]
+    real = slot < np.clip(v.nnz_in_tile, 0, v.cap)[:, None]
+    return v.perm[real] if v.perm is not None else np.zeros(0, np.int64)
+
+
+def _check_perm_bijection(
+    views: list[tuple[_PlanView, dict]], kind_loc: dict
+) -> list[InvariantResult]:
+    """perm values over real slots, unioned across segments/spans, must be
+    a bijection onto ``0 .. nnz-1``."""
+    if any(v.perm is None for v, _ in views):
+        return []  # plans legitimately built without perm
+    vals = np.concatenate([_real_perm_values(v) for v, _ in views]) if views else (
+        np.zeros(0, np.int64)
+    )
+    n = vals.size
+    ok = True
+    detail = ""
+    if n:
+        uniq, counts = np.unique(vals, return_counts=True)
+        dup = uniq[counts > 1]
+        if vals.min() < 0:
+            ok, detail = False, f"real slot carries negative perm {int(vals.min())}"
+        elif dup.size:
+            ok, detail = False, (
+                f"{dup.size} source entr(ies) gathered more than once "
+                f"(first duplicate id {int(dup[0])})"
+            )
+        elif uniq.size != n or int(vals.max()) != n - 1:
+            ok, detail = False, (
+                f"perm not onto 0..{n - 1}: {n} real slots cover "
+                f"{uniq.size} distinct ids, max {int(vals.max())}"
+            )
+    return [InvariantResult("perm", ok, detail=detail, **kind_loc)]
+
+
+def _check_ladder(plan: SCVBucketedPlan) -> list[InvariantResult]:
+    out = []
+    caps = plan.caps
+    if list(caps) != sorted(set(caps)):
+        out.append(
+            InvariantResult(
+                "ladder", False,
+                detail=f"segment caps not ascending distinct: {caps}",
+            )
+        )
+        return out
+    for j, seg in enumerate(plan.segments):
+        v = _PlanView.of(seg)
+        lo = caps[j - 1] if j else 0
+        nnz = v.nnz_in_tile
+        # real tiles must land in the half-open bucket (lo, caps[j]];
+        # zero-nnz coverage tiles may live in any segment
+        bad = np.flatnonzero((nnz > 0) & ((nnz <= lo) | (nnz > caps[j])))
+        out.append(
+            InvariantResult(
+                "ladder",
+                not bad.size,
+                segment=j,
+                offending=tuple(int(i) for i in bad),
+                detail=(
+                    f"{bad.size} tile(s) outside bucket ({lo}, {caps[j]}] "
+                    f"(worst nnz {int(nnz[bad[0]])})"
+                    if bad.size
+                    else ""
+                ),
+            )
+        )
+    return out
+
+
+def _segment_entries(v: _PlanView) -> np.ndarray:
+    """Real entries as a sortable (grow, gcol, val-bits) record array."""
+    slot = np.arange(v.cap)[None, :]
+    real = slot < np.clip(v.nnz_in_tile, 0, v.cap)[:, None]
+    grow = (v.tile_row[:, None] * v.tile + v.rows)[real]
+    gcol = (v.tile_col[:, None] * v.tile + v.cols)[real]
+    bits = v.vals[real].astype(np.float32).view(np.uint32).astype(np.int64)
+    rec = np.stack([grow.astype(np.int64), gcol.astype(np.int64), bits], 1)
+    return rec[np.lexsort((rec[:, 2], rec[:, 1], rec[:, 0]))]
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def _validate_single(
+    v: _PlanView,
+    loc: dict,
+    require_full_coverage: bool = True,
+) -> list[InvariantResult]:
+    checks = _check_shape_aux(v, loc)
+    if not checks[0].ok:  # malformed shapes: later vectorized checks would throw
+        return checks
+    checks += _check_bounds(v, loc)
+    checks += _check_cap(v, loc)
+    checks += _check_packing(v, loc)
+    checks += _check_order(v, loc)
+    checks += _check_coverage(v, loc, require_full=require_full_coverage)
+    return checks
+
+
+def _validate_reassembly(
+    views: list[_PlanView], coo: COOMatrix, loc: dict
+) -> list[InvariantResult]:
+    """The plan's real entries byte-match the source COO multiset."""
+    got = (
+        np.concatenate([_segment_entries(v) for v in views])
+        if views
+        else np.zeros((0, 3), np.int64)
+    )
+    got = got[np.lexsort((got[:, 2], got[:, 1], got[:, 0]))]
+    bits = np.asarray(coo.vals, np.float32).view(np.uint32).astype(np.int64)
+    want = np.stack(
+        [np.asarray(coo.rows, np.int64), np.asarray(coo.cols, np.int64), bits], 1
+    )
+    want = want[np.lexsort((want[:, 2], want[:, 1], want[:, 0]))]
+    ok = got.shape == want.shape and bool(np.array_equal(got, want))
+    detail = ""
+    if not ok:
+        if got.shape[0] != want.shape[0]:
+            detail = f"plan holds {got.shape[0]} entries, COO has {want.shape[0]}"
+        else:
+            first = int(np.flatnonzero((got != want).any(1))[0])
+            detail = (
+                f"entry multiset mismatch at sorted position {first}: "
+                f"plan {got[first].tolist()} vs coo {want[first].tolist()}"
+            )
+    return [InvariantResult("reassembly", ok, detail=detail, **loc)]
+
+
+def validate_plan(
+    obj: Any,
+    coo: Optional[COOMatrix] = None,
+) -> ValidationReport:
+    """Verify the full invariant chain of any plan-like object.
+
+    Accepts :class:`SCVTiles`, :class:`SCVPlan`, :class:`SCVBucketedPlan`,
+    ``core.exec.ShardedPlan``, ``models.gnn.Graph`` and
+    ``models.gnn.BatchedGraph`` (serve composites).  With ``coo`` given,
+    additionally checks the plan's real entries byte-match the source COO.
+    Pure and host-side; returns a :class:`ValidationReport` (use
+    ``.raise_if_failed()`` at admission boundaries).
+    """
+    # local import: core.exec imports partition/scv; keep validate leaf-light
+    from repro.core.exec import ShardedPlan
+
+    checks: list[InvariantResult] = []
+
+    if hasattr(obj, "graph"):  # BatchedGraph composite
+        inner = validate_plan(obj.graph, coo=coo)
+        return ValidationReport(kind="batched-graph", checks=inner.checks)
+    if hasattr(obj, "plan") and hasattr(obj, "n_nodes"):  # models.gnn.Graph
+        inner = validate_plan(obj.plan, coo=coo)
+        return ValidationReport(kind="graph", checks=inner.checks)
+
+    if isinstance(obj, SCVTiles):
+        v = _PlanView.of(obj)
+        checks += _validate_single(v, {}, require_full_coverage=False)
+        checks += _check_perm_bijection([(v, {})], {})
+        if coo is not None:
+            checks += _validate_reassembly([v], coo, {})
+        return ValidationReport(kind="tiles", checks=tuple(checks))
+
+    if isinstance(obj, SCVPlan):
+        v = _PlanView.of(obj)
+        checks += _validate_single(v, {})
+        checks += _check_perm_bijection([(v, {})], {})
+        if coo is not None:
+            checks += _validate_reassembly([v], coo, {})
+        return ValidationReport(kind="plan", checks=tuple(checks))
+
+    if isinstance(obj, SCVBucketedPlan):
+        views = []
+        for j, seg in enumerate(obj.segments):
+            v = _PlanView.of(seg)
+            views.append((v, {"segment": j}))
+            checks += _validate_single(v, {"segment": j})
+        checks += _check_ladder(obj)
+        checks += _check_perm_bijection(views, {})
+        if coo is not None:
+            checks += _validate_reassembly([v for v, _ in views], coo, {})
+        return ValidationReport(kind="bucketed", checks=tuple(checks))
+
+    if isinstance(obj, ShardedPlan):
+        return _validate_sharded(obj, coo)
+
+    raise TypeError(
+        f"validate_plan: unsupported object {type(obj).__name__}; expected "
+        "SCVTiles / SCVPlan / SCVBucketedPlan / ShardedPlan / Graph / "
+        "BatchedGraph"
+    )
+
+
+def _validate_sharded(sp, coo: Optional[COOMatrix]) -> ValidationReport:
+    checks: list[InvariantResult] = []
+    tp = sp.decision.tile_parts
+    views: list[tuple[_PlanView, dict]] = []
+    covered: dict[int, set] = {}
+    for j, seg in enumerate(sp.segments):
+        leading = _np(seg.tile_row).shape[0]
+        if leading != tp:
+            checks.append(
+                InvariantResult(
+                    "shard-span", False, segment=j,
+                    detail=(
+                        f"leading device axis {leading} != decision.tile_parts "
+                        f"{tp}"
+                    ),
+                )
+            )
+            continue
+        for p in range(tp):
+            span = SCVPlan(
+                tile_row=_np(seg.tile_row)[p],
+                tile_col=_np(seg.tile_col)[p],
+                rows=_np(seg.rows)[p],
+                cols=_np(seg.cols)[p],
+                vals=_np(seg.vals)[p],
+                nnz_in_tile=_np(seg.nnz_in_tile)[p],
+                perm=None if seg.perm is None else _np(seg.perm)[p],
+                tile=seg.tile, cap=seg.cap, shape=seg.shape, order=seg.order,
+            )
+            v = _PlanView.of(span)
+            loc = {"segment": j, "part": p}
+            views.append((v, loc))
+            # a span covers only the rows its tiles visit
+            checks += _validate_single(v, loc, require_full_coverage=False)
+            covered.setdefault(j, set()).update(
+                int(r) for r in np.unique(v.tile_row)
+            )
+    # spans of one segment must jointly cover every block-row (each
+    # per-bucket launch defines the strips it visits; the psum merges them
+    # but an entirely-unvisited row would stay at the pre-mask zero only
+    # because aggregate_sharded masks — the *plan* contract is coverage)
+    for j, seg in enumerate(sp.segments):
+        rows = covered.get(j, set())
+        nb = seg.padded_shape[0] // seg.tile
+        missing = sorted(set(range(nb)) - rows)
+        checks.append(
+            InvariantResult(
+                "shard-coverage",
+                not missing,
+                segment=j,
+                offending=tuple(missing),
+                detail=(
+                    f"{len(missing)} block-row(s) unvisited by every span"
+                    if missing
+                    else ""
+                ),
+            )
+        )
+    checks += _check_perm_bijection(views, {})
+    if coo is not None:
+        checks += _validate_reassembly([v for v, _ in views], coo, {})
+    return ValidationReport(kind="sharded", checks=tuple(checks))

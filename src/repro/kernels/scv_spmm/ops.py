@@ -129,7 +129,9 @@ def _spmm_bwd(tile, n_rows, feature_block, interpret, body, chunk,
     dz = dz.at[gcols].add(gf[grows] * vals.reshape(-1)[:, None].astype(jnp.float32))
 
     def f0(a):  # integer-typed primals take float0 cotangents
-        return np.zeros(a.shape, jax.dtypes.float0)
+        # jax requires float0 cotangents as *numpy* arrays (jnp.zeros
+        # cannot hold dtype float0) — deliberate host-side constant.
+        return np.zeros(a.shape, jax.dtypes.float0)  # scvlint: ignore[SCV001]
 
     return (
         f0(tile_row), f0(tile_col), f0(nnz_in_tile), f0(rows), f0(cols),

@@ -56,6 +56,7 @@ import numpy as np
 from repro.core.exec import ShardedPlan
 from repro.core.formats import COOMatrix
 from repro.core.scv import SCVBucketedPlan, SCVPlan
+from repro.core.validate import check_coo, validate_plan
 from repro.models.gnn import (
     BatchedGraph,
     GNNConfig,
@@ -110,6 +111,13 @@ class GraphEngineConfig:
     # engine even when an executor is attached.
     shard_nodes_threshold: Optional[int] = None
     shard_nnz_threshold: Optional[int] = None
+    # debug mode: run the full core.validate invariant chain on every
+    # freshly *built* composite (cache hits were validated when built).
+    # A malformed composite then fails loudly at the admission boundary
+    # with a named invariant instead of producing wrong aggregations.
+    # Costs a host-side pass over the plan leaves — leave off in
+    # production, turn on when bisecting plan corruption.
+    debug_validate: bool = False
 
     def __post_init__(self):
         for field in ("max_batch_graphs", "max_batch_nodes", "tile", "cap"):
@@ -398,8 +406,11 @@ class GraphServeEngine:
     def submit(self, req: GraphRequest) -> None:
         if req.model not in self.models:
             raise KeyError(f"unknown model {req.model!r}; have {list(self.models)}")
-        if req.adj.shape[0] != req.adj.shape[1]:
-            raise ValueError(f"adjacency must be square, got {req.adj.shape}")
+        # admission hook (core.validate): squareness, nnz consistency,
+        # negative / out-of-range indices, non-finite values.  Out-of-range
+        # indices would shift into a NEIGHBOR's block of the composite and
+        # silently corrupt co-batched outputs.
+        check_coo(req.adj, square=True)
         if req.x.shape[0] != req.adj.shape[0]:
             raise ValueError(
                 f"features rows {req.x.shape[0]} != nodes {req.adj.shape[0]}"
@@ -412,16 +423,6 @@ class GraphServeEngine:
                 f"features shape {req.x.shape} incompatible with model "
                 f"{req.model!r} (d_in={mcfg.d_in})"
             )
-        # out-of-range indices would shift into a NEIGHBOR's block of the
-        # composite and silently corrupt co-batched outputs
-        n = req.adj.shape[0]
-        if req.adj.nnz and not (
-            0 <= int(req.adj.rows.min())
-            and int(req.adj.rows.max()) < n
-            and 0 <= int(req.adj.cols.min())
-            and int(req.adj.cols.max()) < n
-        ):
-            raise ValueError(f"adjacency indices out of range for shape {req.adj.shape}")
         self.queue.append(req)
 
     # -- batching ----------------------------------------------------------
@@ -540,6 +541,8 @@ class GraphServeEngine:
                         bg.graph, decision=decision
                     ),
                 )
+            if self.cfg.debug_validate:
+                validate_plan(bg).raise_if_failed()
             return bg
 
         return self.plan_cache.get_or_build(ckey, build)

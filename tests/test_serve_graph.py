@@ -236,6 +236,80 @@ def test_engine_rejects_out_of_range_indices(rng):
         )
 
 
+def test_engine_rejects_negative_indices(rng):
+    # negative indices wrap in numpy fancy indexing: a -1 row would write
+    # into the LAST node's aggregation, silently
+    eng, _, _ = _engine()
+    bad = COOMatrix(
+        np.array([-1, 1], np.int32),
+        np.array([0, 2], np.int32),
+        np.ones(2, np.float32),
+        (60, 60),
+    )
+    with pytest.raises(ValueError, match="non-negative"):
+        eng.submit(
+            GraphRequest(rid=0, adj=bad, x=np.zeros((60, 8), np.float32), model="gcn")
+        )
+
+
+def test_engine_rejects_nonfinite_values(rng):
+    eng, _, _ = _engine()
+    bad = COOMatrix(
+        np.array([0, 1], np.int32),
+        np.array([0, 2], np.int32),
+        np.array([1.0, np.nan], np.float32),
+        (60, 60),
+    )
+    with pytest.raises(ValueError, match="finite"):
+        eng.submit(
+            GraphRequest(rid=0, adj=bad, x=np.zeros((60, 8), np.float32), model="gcn")
+        )
+
+
+def test_engine_debug_validate_serves_clean_traffic(rng):
+    # debug mode runs the full core.validate invariant chain on every
+    # freshly built composite; clean traffic must be unaffected
+    eng, params, cfg = _engine(debug_validate=True)
+    adjs = _graphs([30, 45], seed=33)
+    xs = _features(rng, adjs, 8)
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+    done = eng.run()
+    assert len(done) == 2 and all(r.done for r in done)
+    ref_eng, _, _ = _engine()
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        ref_eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+    for r, ref in zip(done, ref_eng.run()):
+        np.testing.assert_array_equal(r.out, ref.out)
+
+
+def test_engine_debug_validate_catches_corrupt_plan(rng, monkeypatch):
+    # corrupt the member-plan builder: debug mode must fail the wave with
+    # a named invariant instead of serving wrong aggregations
+    import dataclasses as _dc
+
+    import repro.serve.graph_engine as ge
+    from repro.core.validate import PlanInvariantError
+
+    real_build = ge.build_graph
+
+    def corrupt_build(*a, **k):
+        g = real_build(*a, **k)
+        seg0 = g.plan.segments[0]
+        nnz = np.array(seg0.nnz_in_tile)
+        nnz[0] = seg0.cap + 7  # cap invariant broken
+        segs = (_dc.replace(seg0, nnz_in_tile=nnz),) + g.plan.segments[1:]
+        return _dc.replace(g, plan=_dc.replace(g.plan, segments=segs))
+
+    monkeypatch.setattr(ge, "build_graph", corrupt_build)
+    eng, _, _ = _engine(debug_validate=True, max_retries=0)
+    adj = _graphs([30], seed=34)[0]
+    eng.submit(GraphRequest(rid=0, adj=adj, x=np.zeros((30, 8), np.float32),
+                            model="gcn"))
+    with pytest.raises(PlanInvariantError, match="cap"):
+        eng.run()
+
+
 def test_split_outputs_returns_copies(rng):
     # views would pin the bucket-sized composite for the life of each output
     adjs = _graphs([40, 40], seed=21)

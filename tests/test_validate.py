@@ -1,0 +1,276 @@
+"""Mutation tests for core/validate.py (scvcheck leg 1).
+
+Each invariant class gets a green baseline plus a corrupted plan whose
+failing ``ValidationReport`` must *name the offender* (tile / segment /
+span indices) — the acceptance criterion of ISSUE 6.  Corruptions are
+made on host numpy copies via ``dataclasses.replace`` so each test
+mutates exactly one invariant's witness.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import coo_to_scv_tiles, plan_from_tiles, plan_from_tiles_bucketed
+from repro.core.exec import PlanExecutor, ShardingDecision
+from repro.core.formats import COOMatrix
+from repro.core.validate import (
+    PlanInvariantError,
+    check_coo,
+    validate_plan,
+)
+from repro.simul.datasets import gcn_normalize, powerlaw_graph
+
+
+def _coo(n=96, edges=500, seed=0):
+    return gcn_normalize(powerlaw_graph(n, edges, seed=seed))
+
+
+def _plan(coo=None, tile=16, cap=32):
+    coo = coo if coo is not None else _coo()
+    return plan_from_tiles(coo_to_scv_tiles(coo, tile, cap=cap))
+
+
+def _as_np(plan):
+    """Writable numpy copies of every leaf (frozen pytrees hold jnp)."""
+    return {
+        f: np.array(getattr(plan, f))
+        for f in ("tile_row", "tile_col", "rows", "cols", "vals", "nnz_in_tile")
+    } | ({"perm": np.array(plan.perm)} if plan.perm is not None else {})
+
+
+# ---------------------------------------------------------------------------
+# green baselines
+# ---------------------------------------------------------------------------
+def test_valid_plan_passes_with_reassembly():
+    coo = _coo()
+    rep = validate_plan(_plan(coo), coo=coo)
+    assert rep.ok, rep.summary()
+    assert rep.kind == "plan"
+    assert {c.invariant for c in rep.checks} >= {
+        "shape-aux", "bounds", "cap", "packing", "order",
+        "coverage", "coverage-contiguity", "perm", "reassembly",
+    }
+
+
+def test_valid_tiles_and_bucketed_pass():
+    coo = _coo()
+    tiles = coo_to_scv_tiles(coo, 16, cap=32)
+    assert validate_plan(tiles, coo=coo).ok
+    bplan = plan_from_tiles_bucketed(tiles, caps=(4, 8, 32))
+    rep = validate_plan(bplan, coo=coo)
+    assert rep.ok, rep.summary()
+    assert rep.kind == "bucketed"
+    assert any(c.invariant == "ladder" for c in rep.checks)
+
+
+def test_report_summary_and_raise():
+    rep = validate_plan(_plan())
+    assert "passed" in rep.summary()
+    assert rep.raise_if_failed() is rep
+
+
+# ---------------------------------------------------------------------------
+# mutations: each invariant class, offender named
+# ---------------------------------------------------------------------------
+def test_mutation_order_names_tile():
+    p = _plan()
+    leaves = _as_np(p)
+    real = np.flatnonzero(leaves["nnz_in_tile"] > 0)
+    assert len(real) >= 2
+    i, j = int(real[0]), int(real[-1])
+    for f in ("tile_row", "tile_col", "rows", "cols", "vals", "nnz_in_tile", "perm"):
+        leaves[f][[i, j]] = leaves[f][[j, i]]
+    rep = validate_plan(dataclasses.replace(p, **leaves))
+    fails = rep.failed("order")
+    assert fails, rep.summary()
+    assert any(f.offending for f in fails)
+    with pytest.raises(PlanInvariantError) as ei:
+        rep.raise_if_failed()
+    assert ei.value.report is rep
+
+
+def test_mutation_coverage_names_missing_row():
+    p = _plan()
+    leaves = _as_np(p)
+    # orphan one block-row: point every tile that visits the last row at
+    # row 0 instead
+    last = int(leaves["tile_row"].max())
+    leaves["tile_row"][leaves["tile_row"] == last] = 0
+    rep = validate_plan(dataclasses.replace(p, **leaves))
+    fails = rep.failed("coverage")
+    assert fails and last in fails[0].offending, rep.summary()
+
+
+def test_mutation_contiguity_names_second_run():
+    p = _plan()
+    leaves = _as_np(p)
+    rows = leaves["tile_row"]
+    # split block-row 0 into two runs by moving its first visit to the end
+    first = int(np.flatnonzero(rows == 0)[0])
+    order = np.r_[np.delete(np.arange(len(rows)), first), first]
+    for f in ("tile_row", "tile_col", "rows", "cols", "vals", "nnz_in_tile", "perm"):
+        leaves[f] = leaves[f][order]
+    rep = validate_plan(dataclasses.replace(p, **leaves))
+    fails = rep.failed("coverage-contiguity")
+    assert fails and fails[0].offending, rep.summary()
+    assert int(fails[0].offending[0]) == len(rows) - 1  # the moved tile
+
+
+def test_mutation_cap_names_tile():
+    p = _plan()
+    leaves = _as_np(p)
+    leaves["nnz_in_tile"][0] = p.cap + 5
+    rep = validate_plan(dataclasses.replace(p, **leaves))
+    fails = rep.failed("cap")
+    assert fails and fails[0].offending == (0,), rep.summary()
+    assert str(p.cap) in fails[0].detail
+
+
+def test_mutation_packing_names_tile():
+    p = _plan()
+    leaves = _as_np(p)
+    t = int(np.flatnonzero(leaves["nnz_in_tile"] < p.cap)[0])
+    leaves["vals"][t, -1] = 7.5  # dirty a padding slot
+    rep = validate_plan(dataclasses.replace(p, **leaves))
+    fails = rep.failed("packing")
+    assert fails and t in fails[0].offending, rep.summary()
+
+
+def test_mutation_perm_duplicate_detected():
+    p = _plan()
+    leaves = _as_np(p)
+    real = np.flatnonzero(leaves["nnz_in_tile"] >= 2)
+    t = int(real[0])
+    leaves["perm"][t, 1] = leaves["perm"][t, 0]  # gather one entry twice
+    rep = validate_plan(dataclasses.replace(p, **leaves))
+    fails = rep.failed("perm")
+    assert fails and "more than once" in fails[0].detail, rep.summary()
+
+
+def test_mutation_bounds_names_tile():
+    p = _plan()
+    leaves = _as_np(p)
+    t = int(np.flatnonzero(leaves["nnz_in_tile"] > 0)[0])
+    leaves["rows"][t, 0] = p.tile  # local index past the tile edge
+    rep = validate_plan(dataclasses.replace(p, **leaves))
+    fails = rep.failed("bounds")
+    assert fails and t in fails[0].offending, rep.summary()
+
+
+def test_mutation_ladder_names_segment_and_tile():
+    coo = _coo()
+    bplan = plan_from_tiles_bucketed(coo_to_scv_tiles(coo, 16, cap=32), caps=(4, 8, 32))
+    hot = None
+    for j, seg in enumerate(bplan.segments):
+        nnz = np.array(seg.nnz_in_tile)
+        if j > 0 and (nnz > 0).any():
+            hot = (j, seg, nnz)
+            break
+    assert hot is not None, "graph produced no tile past the first bucket"
+    j, seg, nnz = hot
+    t = int(np.flatnonzero(nnz > 0)[0])
+    nnz[t] = 1  # belongs in bucket 0, claims segment j
+    mutated = dataclasses.replace(seg, nnz_in_tile=nnz)
+    segs = tuple(mutated if k == j else s for k, s in enumerate(bplan.segments))
+    rep = validate_plan(dataclasses.replace(bplan, segments=segs))
+    fails = rep.failed("ladder")
+    assert fails, rep.summary()
+    assert fails[0].segment == j and t in fails[0].offending
+
+
+def test_mutation_reassembly_detects_value_drift():
+    coo = _coo()
+    p = _plan(coo)
+    leaves = _as_np(p)
+    t = int(np.flatnonzero(leaves["nnz_in_tile"] > 0)[0])
+    leaves["vals"][t, 0] += 1.0
+    rep = validate_plan(dataclasses.replace(p, **leaves), coo=coo)
+    assert rep.failed("reassembly"), rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# sharded plans (tile_parts=1 keeps this single-device; the multi-device
+# spans are exercised by test_exec.py's subprocess tier + the round-trip
+# property test)
+# ---------------------------------------------------------------------------
+def _sharded(coo=None):
+    coo = coo if coo is not None else _coo()
+    bplan = plan_from_tiles_bucketed(coo_to_scv_tiles(coo, 16, cap=32), caps=(8, 32))
+    sp = PlanExecutor().prepare(bplan, decision=ShardingDecision("tiles", 1, 1))
+    return coo, sp
+
+
+def test_valid_sharded_passes():
+    coo, sp = _sharded()
+    rep = validate_plan(sp, coo=coo)
+    assert rep.ok, rep.summary()
+    assert rep.kind == "sharded"
+    assert any(c.invariant == "shard-coverage" for c in rep.checks)
+
+
+def test_mutation_shard_span_leading_axis():
+    coo, sp = _sharded()
+    # decision claims 2 spans, arrays carry 1: layout contract broken
+    broken = dataclasses.replace(sp, decision=ShardingDecision("tiles", 2, 1))
+    rep = validate_plan(broken)
+    fails = rep.failed("shard-span")
+    assert fails, rep.summary()
+    assert fails[0].segment == 0 and "tile_parts" in fails[0].detail
+
+
+def test_mutation_shard_span_order_names_segment_and_part():
+    coo, sp = _sharded()
+    segs = list(sp.segments)
+    for j, seg in enumerate(segs):
+        nnz = np.array(seg.nnz_in_tile)[0]
+        real = np.flatnonzero(nnz > 0)
+        if len(real) < 2:
+            continue
+        i, k = int(real[0]), int(real[-1])
+        leaves = {}
+        for f in ("tile_row", "tile_col", "rows", "cols", "vals",
+                  "nnz_in_tile", "perm"):
+            a = np.array(getattr(seg, f))
+            a[0, [i, k]] = a[0, [k, i]]
+            leaves[f] = a
+        segs[j] = dataclasses.replace(seg, **leaves)
+        rep = validate_plan(dataclasses.replace(sp, segments=tuple(segs)))
+        fails = rep.failed("order")
+        assert fails, rep.summary()
+        assert fails[0].segment == j and fails[0].part == 0
+        return
+    pytest.skip("no segment with two real tiles in one span")
+
+
+# ---------------------------------------------------------------------------
+# COO admission hook
+# ---------------------------------------------------------------------------
+def test_check_coo_accepts_valid():
+    check_coo(_coo(), square=True)
+    check_coo(COOMatrix(rows=np.zeros(0, np.int32), cols=np.zeros(0, np.int32),
+                        vals=np.zeros(0, np.float32), shape=(4, 4)))
+
+
+@pytest.mark.parametrize(
+    "mutate,match",
+    [
+        (lambda a: dataclasses.replace(a, rows=a.rows - a.rows.max() - 1),
+         "non-negative"),
+        (lambda a: dataclasses.replace(a, cols=a.cols + a.shape[1]),
+         "out of range"),
+        (lambda a: dataclasses.replace(a, vals=np.full_like(a.vals, np.nan)),
+         "finite"),
+        (lambda a: dataclasses.replace(a, vals=a.vals[:-1]), "disagree on nnz"),
+        (lambda a: dataclasses.replace(a, shape=(a.shape[0], a.shape[1] + 1)),
+         "square"),
+    ],
+)
+def test_check_coo_rejections(mutate, match):
+    with pytest.raises(ValueError, match=match):
+        check_coo(mutate(_coo()), square=True)
+
+
+def test_validate_plan_rejects_unknown_type():
+    with pytest.raises(TypeError, match="unsupported object"):
+        validate_plan(object())

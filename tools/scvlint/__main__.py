@@ -1,0 +1,7 @@
+"""``python -m tools.scvlint [paths...]`` — see tools/scvlint/__init__.py."""
+import sys
+
+from tools.scvlint import main
+
+if __name__ == "__main__":
+    sys.exit(main())
