@@ -21,7 +21,11 @@
 #     emits BENCH_dist.json),
 #   * benchmarks/serve_bench.py (engine >= naive loop, cache hits, and the
 #     bucketed-vs-single-cap A/B that gates the flipped
-#     GraphEngineConfig.bucket_caps default; emits BENCH_serve.json).
+#     GraphEngineConfig.bucket_caps default; emits BENCH_serve.json),
+#   * benchmarks/stream_bench.py (small-delta stream.apply_delta >= 10x a
+#     full coo_to_scv_tiles rebuild at 1M edges, byte-identical to the
+#     rebuild; engine updates land as plan-cache revalidations, never
+#     full misses; emits BENCH_stream.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -34,3 +38,4 @@ python benchmarks/preprocess_bench.py
 python benchmarks/kernel_bench.py
 python benchmarks/dist_bench.py
 python benchmarks/serve_bench.py
+python benchmarks/stream_bench.py

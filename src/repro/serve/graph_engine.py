@@ -65,16 +65,27 @@ from repro.models.gnn import (
     gnn_forward_batched,
 )
 from repro.serve.plan_cache import PlanCache, combine_keys, coo_content_key
+from repro.stream import DeltaBatch, apply_coo, apply_delta, check_delta
 
 
 @dataclasses.dataclass
 class GraphRequest:
-    """One inference request: run ``model`` over (adj, x)."""
+    """One inference request: run ``model`` over (adj, x).
+
+    ``adj`` may be omitted when ``graph_id`` names a graph the engine
+    already tracks (registered by an earlier request that carried both) —
+    the wave then serves the tracked graph's *current* adjacency, i.e.
+    the state after every ``update()`` applied so far.
+    """
 
     rid: int
-    adj: COOMatrix  # normalized adjacency (e.g. gcn_normalize output)
-    x: np.ndarray  # f32[n_nodes, d_in]
+    adj: Optional[COOMatrix] = None  # normalized adjacency (e.g. gcn_normalize)
+    x: Optional[np.ndarray] = None  # f32[n_nodes, d_in]
     model: str = "default"
+    # stable identity for delta-tracked graphs: requests carrying a
+    # graph_id (re)register the adjacency under it, and later requests may
+    # omit adj to serve the tracked (delta-updated) state
+    graph_id: Optional[str] = None
     out: Optional[np.ndarray] = None  # f32[n_nodes, n_classes] when done
     done: bool = False
     error: Optional[str] = None  # set when the request is ejected as failed
@@ -362,6 +373,16 @@ def assemble_batched_graph(
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _TrackedGraph:
+    """Current state of a delta-tracked graph: the adjacency after every
+    applied delta, and the plan-cache key its plan lives under (the
+    delta-chained lineage of the registration-time content key)."""
+
+    adj: COOMatrix
+    key: str
+
+
 class GraphServeEngine:
     """Drives GNN models over batches of graph requests.
 
@@ -402,18 +423,52 @@ class GraphServeEngine:
         self.n_batches = 0  # == forward launches (one per batch)
         self.n_sharded_batches = 0  # waves routed through the executor
         self.serve_seconds = 0.0
+        # delta-tracked graphs (see update()): graph_id -> current state
+        self._graphs: dict[str, _TrackedGraph] = {}
+        self.n_graph_updates = 0
+
+    def _member_content_key(self, adj: COOMatrix) -> str:
+        cap_sig = tuple(self.cfg.bucket_caps) or self.cfg.cap
+        return coo_content_key(adj, tile=self.cfg.tile, cap=cap_sig)
+
+    def _resolve_adj(self, req: GraphRequest) -> COOMatrix:
+        """The adjacency a wave serves for ``req`` — the tracked graph's
+        *current* (post-update) state when the request rides a graph_id,
+        else the request's own.  Resolved at wave time, never at submit
+        time, so an ``update()`` landing between submit and run is
+        reflected in the served output."""
+        if req.graph_id is not None:
+            return self._graphs[req.graph_id].adj
+        return req.adj
 
     def submit(self, req: GraphRequest) -> None:
         if req.model not in self.models:
             raise KeyError(f"unknown model {req.model!r}; have {list(self.models)}")
-        # admission hook (core.validate): squareness, nnz consistency,
-        # negative / out-of-range indices, non-finite values.  Out-of-range
-        # indices would shift into a NEIGHBOR's block of the composite and
-        # silently corrupt co-batched outputs.
-        check_coo(req.adj, square=True)
-        if req.x.shape[0] != req.adj.shape[0]:
+        if req.adj is not None:
+            # admission hook (core.validate): squareness, nnz consistency,
+            # negative / out-of-range indices, non-finite values.
+            # Out-of-range indices would shift into a NEIGHBOR's block of
+            # the composite and silently corrupt co-batched outputs.
+            check_coo(req.adj, square=True)
+            if req.graph_id is not None:
+                # (re)register: carrying both adj and graph_id resets the
+                # tracked state to this adjacency (content-keyed afresh)
+                self._graphs[req.graph_id] = _TrackedGraph(
+                    adj=req.adj, key=self._member_content_key(req.adj)
+                )
+        elif req.graph_id is None:
+            raise ValueError("request needs adj (or a tracked graph_id)")
+        elif req.graph_id not in self._graphs:
+            raise KeyError(
+                f"unknown graph_id {req.graph_id!r}; submit once with adj= "
+                "to register it"
+            )
+        adj = self._resolve_adj(req)
+        if req.x is None:
+            raise ValueError("request needs node features x")
+        if req.x.shape[0] != adj.shape[0]:
             raise ValueError(
-                f"features rows {req.x.shape[0]} != nodes {req.adj.shape[0]}"
+                f"features rows {req.x.shape[0]} != nodes {adj.shape[0]}"
             )
         # reject malformed width here: inside run() it would crash mid-wave
         # and take the co-batched requests down with it
@@ -424,6 +479,47 @@ class GraphServeEngine:
                 f"{req.model!r} (d_in={mcfg.d_in})"
             )
         self.queue.append(req)
+
+    def update(self, graph_id: str, delta: DeltaBatch) -> str:
+        """Apply an edge delta to a tracked graph; returns its new plan key.
+
+        Admission runs ``stream.check_delta`` against the tracked
+        adjacency (out-of-range ids, non-finite values, removes of absent
+        edges, duplicate/present inserts all rejected before any state
+        changes).  The tracked adjacency advances by ``apply_coo`` and the
+        plan cache **revalidates by delta**: a live cached plan is patched
+        in place via ``stream.apply_delta`` and re-keyed under
+        ``delta_key(old, delta)`` (counted in ``stats.revalidated``)
+        instead of becoming a full rebuild miss.  Downstream composite and
+        sharded cache entries are invalidated automatically: their keys
+        combine the member keys, so the re-keyed member can never resolve
+        a pre-delta composite — stale entries just age out of the LRU.
+        """
+        st = self._graphs.get(graph_id)
+        if st is None:
+            raise KeyError(
+                f"unknown graph_id {graph_id!r}; submit once with adj= to "
+                "register it"
+            )
+        check_delta(delta, coo=st.adj)
+        if len(delta) == 0:
+            return st.key
+        st.adj = apply_coo(st.adj, delta, check=False)
+        st.key = self.plan_cache.revalidate(
+            st.key, delta, patch=lambda g: apply_delta(g, delta, check=False)
+        )
+        self.n_graph_updates += 1
+        return st.key
+
+    def tracked_adj(self, graph_id: str) -> COOMatrix:
+        """The current adjacency of a tracked graph (post any updates)."""
+        st = self._graphs.get(graph_id)
+        if st is None:
+            raise KeyError(
+                f"unknown graph_id {graph_id!r}; submit once with adj= to "
+                "register it"
+            )
+        return st.adj
 
     # -- batching ----------------------------------------------------------
     def _next_batch(self) -> list[GraphRequest]:
@@ -448,7 +544,7 @@ class GraphServeEngine:
                 and len(batch) < self.cfg.max_batch_graphs
             )
             if fits:
-                aligned = -(-r.adj.shape[0] // T) * T
+                aligned = -(-self._resolve_adj(r).shape[0] // T) * T
                 fits = not batch or nodes + aligned <= self.cfg.max_batch_nodes
             if fits:
                 batch.append(r)
@@ -459,7 +555,7 @@ class GraphServeEngine:
         return batch
 
     # -- plans -------------------------------------------------------------
-    def _shard_decision(self, batch, bucket: int, mcfg):
+    def _shard_decision(self, adjs, bucket: int, mcfg):
         """Placement decision for a composite, or None for single-device.
 
         A composite goes multi-device when its padded node count or total
@@ -469,7 +565,7 @@ class GraphServeEngine:
         the composite cache key."""
         if self.executor is None:
             return None
-        nnz = sum(r.adj.nnz for r in batch)
+        nnz = sum(a.nnz for a in adjs)
         over = (
             self.cfg.shard_nodes_threshold is not None
             and bucket > self.cfg.shard_nodes_threshold
@@ -501,7 +597,12 @@ class GraphServeEngine:
         over-threshold composite is cached *placed* (its plan already a
         ``ShardedPlan`` on the executor's mesh), so a hot oversized batch
         reuses its sharded layout with zero placement work — and the same
-        members under a different executor/threshold config never alias."""
+        members under a different executor/threshold config never alias.
+
+        Delta-tracked members resolve (key, adjacency) from the tracked
+        state *here*, at wave time: their member key is the delta-chained
+        key ``update()`` maintains, so a post-update wave can never hit a
+        pre-delta composite (the composite key combines member keys)."""
         T, cap = self.cfg.tile, self.cfg.cap
         bucket_caps = tuple(self.cfg.bucket_caps) or None
         _, mcfg = self.models[batch[0].model]
@@ -510,10 +611,16 @@ class GraphServeEngine:
         # (a single-cap plan and a bucketed plan of the same graph are
         # different device objects)
         cap_sig = bucket_caps if bucket_caps else cap
-        member_keys = [coo_content_key(r.adj, tile=T, cap=cap_sig) for r in batch]
-        aligned = sum(-(-r.adj.shape[0] // T) * T for r in batch)
+        adjs = [self._resolve_adj(r) for r in batch]
+        member_keys = [
+            self._graphs[r.graph_id].key
+            if r.graph_id is not None
+            else coo_content_key(a, tile=T, cap=cap_sig)
+            for r, a in zip(batch, adjs)
+        ]
+        aligned = sum(-(-a.shape[0] // T) * T for a in adjs)
         bucket = _bucket_nodes(aligned, self.cfg.node_buckets, T)
-        decision = self._shard_decision(batch, bucket, mcfg)
+        decision = self._shard_decision(adjs, bucket, mcfg)
         ckey = combine_keys(
             member_keys,
             salt=f"batch;bucket={bucket};tile={T};caps={cap_sig};"
@@ -525,13 +632,13 @@ class GraphServeEngine:
             plans = [
                 self.plan_cache.get_or_build(
                     k,
-                    lambda r=r: build_graph(
-                        r.adj, tile=T,
+                    lambda a=a: build_graph(
+                        a, tile=T,
                         backend_cap=None if bucket_caps else cap,
                         bucket_caps=bucket_caps,
                     ),
                 )
-                for k, r in zip(member_keys, batch)
+                for k, a in zip(member_keys, adjs)
             ]
             bg = assemble_batched_graph(plans, T, bucket, with_edges=with_edges)
             if decision is not None:
@@ -617,6 +724,9 @@ class GraphServeEngine:
             "plan_cache_misses": s.misses,
             "plan_cache_evictions": s.evictions,
             "plan_cache_expired": s.expired,
+            "plan_cache_revalidated": s.revalidated,
+            "graph_updates": self.n_graph_updates,
+            "tracked_graphs": len(self._graphs),
             "plan_cache_bytes": s.bytes_in_use,
             "plan_cache_entries": s.entries,
             "plan_cache_hit_rate": s.hit_rate,

@@ -84,6 +84,22 @@ def combine_keys(keys: Iterable[str], *, salt: str = "") -> str:
     return h.hexdigest()
 
 
+def delta_key(key: str, delta: Any) -> str:
+    """Key of a cached plan after applying ``delta`` (a
+    ``stream.DeltaBatch``): hash of the old key + the delta's framed byte
+    signature.  Chaining digests is orders of magnitude cheaper than
+    re-hashing a mutated million-edge adjacency, at the cost that the
+    chained key differs from ``coo_content_key`` of the final adjacency
+    computed cold — a graph is either tracked by deltas or keyed by
+    content, never both (see serve/README.md).
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(b"delta;")
+    h.update(key.encode())
+    h.update(delta.signature())
+    return h.hexdigest()
+
+
 def plan_nbytes(plan: Any) -> int:
     """Best-effort byte footprint of a cached plan.
 
@@ -129,6 +145,7 @@ class PlanCacheStats:
     misses: int = 0
     evictions: int = 0
     expired: int = 0  # TTL drops (also counted as misses on lookup)
+    revalidated: int = 0  # delta-patched entries re-keyed in place
     bytes_in_use: int = 0
     entries: int = 0
     build_seconds: float = 0.0
@@ -261,6 +278,35 @@ class PlanCache:
         if nb <= self.max_bytes:
             self.put(key, value, nb)
         return value
+
+    def revalidate(
+        self,
+        key: str,
+        delta: Any,
+        patch: Optional[Callable[[Any], Any]] = None,
+    ) -> str:
+        """Re-key the entry at ``key`` for a delta-mutated graph instead of
+        letting the mutation become a full miss.
+
+        Returns ``delta_key(key, delta)`` — the key the patched plan lives
+        under.  If the entry is live and ``patch`` is given, the cached
+        value is patched (``patch(value)``, typically
+        ``stream.apply_delta``), stored under the new key, and counted in
+        ``stats.revalidated``; the old key is dropped.  If the entry is
+        absent (evicted/expired) the new key is still returned so the
+        caller's next ``get_or_build`` rebuilds from the mutated source —
+        revalidation degrades to a plain miss, never to a stale hit.
+        """
+        new_key = delta_key(key, delta)
+        e = self._live_entry(key)
+        if e is None or patch is None:
+            return new_key
+        self._entries.pop(key)
+        self.stats.bytes_in_use -= e.nbytes
+        self.stats.entries = len(self._entries)
+        self.put(new_key, patch(e.value))
+        self.stats.revalidated += 1
+        return new_key
 
     def _evict(self) -> None:
         while self._entries and (

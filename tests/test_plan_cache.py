@@ -7,8 +7,10 @@ from repro.serve.plan_cache import (
     PlanCache,
     combine_keys,
     coo_content_key,
+    delta_key,
     plan_nbytes,
 )
+from repro.stream import DeltaBatch
 
 
 def _coo(seed=0, n=32, nnz=64):
@@ -204,6 +206,63 @@ def test_no_ttl_entries_never_expire():
     c.put("a", 1, nbytes=5)
     clk.now = 1e12
     assert c.get("a") == 1 and c.stats.expired == 0
+
+
+# ---------------------------------------------------------------------------
+# revalidation by delta (stream/ integration)
+# ---------------------------------------------------------------------------
+def test_delta_key_chains_and_separates():
+    k = coo_content_key(_coo(0), tile=64)
+    d1 = DeltaBatch.of(inserts=[(0, 1, 2.0)])
+    d2 = DeltaBatch.of(inserts=[(0, 2, 2.0)])
+    assert delta_key(k, d1) == delta_key(k, d1)
+    assert delta_key(k, d1) != delta_key(k, d2)
+    assert delta_key(k, d1) != k
+    # chaining is order-sensitive: d1 then d2 != d2 then d1
+    assert delta_key(delta_key(k, d1), d2) != delta_key(delta_key(k, d2), d1)
+
+
+def test_revalidate_patches_and_rekeys_live_entry():
+    c = PlanCache(max_entries=4)
+    d = DeltaBatch.of(inserts=[(0, 1, 2.0)])
+    c.put("k", 10, nbytes=8)
+    new_key = c.revalidate("k", d, patch=lambda v: v + 1)
+    assert new_key == delta_key("k", d)
+    assert "k" not in c and c.peek(new_key) == 11
+    assert c.stats.revalidated == 1
+    assert len(c) == 1
+
+
+def test_revalidate_absent_entry_degrades_to_miss():
+    c = PlanCache(max_entries=4)
+    d = DeltaBatch.of(removes=[(3, 4)])
+    calls = []
+    new_key = c.revalidate("never-cached", d, patch=lambda v: calls.append(v))
+    assert new_key == delta_key("never-cached", d)
+    assert calls == [] and len(c) == 0
+    assert c.stats.revalidated == 0
+
+
+def test_revalidate_without_patch_only_returns_key():
+    c = PlanCache(max_entries=4)
+    d = DeltaBatch.of(removes=[(3, 4)])
+    c.put("k", 10, nbytes=8)
+    new_key = c.revalidate("k", d)
+    assert new_key == delta_key("k", d)
+    # no patch callback: the entry stays under its old key, untouched
+    assert c.peek("k") == 10 and c.peek(new_key) is None
+    assert c.stats.revalidated == 0
+
+
+def test_revalidate_expired_entry_degrades_to_miss():
+    clk = _FakeClock()
+    c = PlanCache(max_entries=4, max_age_s=1.0, clock=clk)
+    c.put("k", 10, nbytes=8)
+    clk.now = 5.0
+    d = DeltaBatch.of(inserts=[(0, 1, 2.0)])
+    new_key = c.revalidate("k", d, patch=lambda v: v + 1)
+    assert new_key == delta_key("k", d)
+    assert len(c) == 0 and c.stats.revalidated == 0
 
 
 # ---------------------------------------------------------------------------

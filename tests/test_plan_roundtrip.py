@@ -77,6 +77,80 @@ def test_roundtrip_random_sweep():
         _roundtrip(coo, tile, cap, caps)
 
 
+# ---------------------------------------------------------------------------
+# delta round-trip (ISSUE 7 satellite): a random interleaved insert/remove
+# sequence applied via stream.apply_delta is byte-identical to rebuilding
+# from the final COO, and validate_plan stays green at plan / bucketed /
+# sharded layers after EVERY step.
+# ---------------------------------------------------------------------------
+def _random_step(rng, coo, n):
+    """One random delta against the current COO: a mix of inserts at
+    absent coordinates, removes of stored edges, and value updates."""
+    from repro.stream import DeltaBatch
+
+    have = set(zip(coo.rows.tolist(), coo.cols.tolist()))
+    inserts, removes = [], []
+    for i in rng.choice(max(coo.nnz, 1), size=min(int(rng.integers(0, 5)), coo.nnz),
+                        replace=False):
+        r, c = int(coo.rows[i]), int(coo.cols[i])
+        removes.append((r, c))
+        if rng.random() < 0.5:  # value update: remove + re-insert
+            inserts.append((r, c, float(rng.standard_normal() + 2)))
+    tries = 0
+    want = int(rng.integers(0, 5))
+    while len(inserts) - sum(1 for e in inserts if (e[0], e[1]) in have) < want \
+            and tries < 1000:
+        r, c = int(rng.integers(n)), int(rng.integers(n))
+        if (r, c) not in have and all((r, c) != e[:2] for e in inserts):
+            inserts.append((r, c, float(rng.standard_normal() + 2)))
+        tries += 1
+    return DeltaBatch.of(inserts=inserts, removes=removes)
+
+
+def test_delta_sequence_roundtrip():
+    from repro.stream import apply_coo, apply_delta
+
+    rng = np.random.default_rng(7)
+    n, tile, cap = 129, 16, 32
+    caps = (8, 32)
+    coo = _random_coo(rng, n, 0.02)
+    tiles = coo_to_scv_tiles(coo, tile, cap=cap)
+    plan = plan_from_tiles(tiles)
+    bplan = plan_from_tiles_bucketed(tiles, caps=caps)
+
+    for step in range(6):
+        d = _random_step(rng, coo, n)
+        if len(d) == 0:
+            continue
+        coo = apply_coo(coo, d)
+        plan = apply_delta(plan, d)
+        bplan = apply_delta(bplan, d)
+
+        # byte-identity to the from-scratch rebuild of the current COO
+        ref_tiles = coo_to_scv_tiles(coo, tile, cap=cap)
+        ref_plan = plan_from_tiles(ref_tiles)
+        for f in ("tile_row", "tile_col", "rows", "cols", "vals",
+                  "nnz_in_tile", "perm"):
+            assert np.array_equal(
+                np.asarray(getattr(plan, f)), np.asarray(getattr(ref_plan, f))
+            ), (step, f)
+        ref_bplan = plan_from_tiles_bucketed(ref_tiles, caps=caps)
+        for s, rs in zip(bplan.segments, ref_bplan.segments):
+            for f in ("tile_row", "tile_col", "rows", "cols", "vals",
+                      "nnz_in_tile", "perm"):
+                assert np.array_equal(
+                    np.asarray(getattr(s, f)), np.asarray(getattr(rs, f))
+                ), (step, s.cap, f)
+
+        # the full invariant chain stays green at every layer, every step
+        validate_plan(plan, coo=coo).raise_if_failed()
+        validate_plan(bplan, coo=coo).raise_if_failed()
+        sp = PlanExecutor().prepare(
+            bplan, decision=ShardingDecision("tiles", 1, 1)
+        )
+        validate_plan(sp, coo=coo).raise_if_failed()
+
+
 def test_roundtrip_hypothesis():
     hyp = pytest.importorskip("hypothesis")
     st = pytest.importorskip("hypothesis.strategies")

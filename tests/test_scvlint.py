@@ -181,6 +181,37 @@ def test_scv005_unroll_flagged():
 
 
 # ---------------------------------------------------------------------------
+# SCV006 — full rebuilds inside src/repro/stream/
+# ---------------------------------------------------------------------------
+def test_scv006_rebuild_in_stream_flagged():
+    src = (
+        "from repro.core import coo_to_scv_tiles\n"
+        "def patch(coo, delta):\n"
+        "    return coo_to_scv_tiles(coo, 64)\n"
+    )
+    assert _rules(src, "src/repro/stream/delta.py") == [("SCV006", 3)]
+    # dotted form fires too
+    dotted = (
+        "from repro import core\n"
+        "def patch(coo, delta):\n"
+        "    return core.plan_from_tiles_bucketed(core.coo_to_scv_tiles(coo, 64))\n"
+    )
+    assert {r for r, _ in _rules(dotted, "src/repro/stream/delta.py")} == {"SCV006"}
+
+
+def test_scv006_scoped_to_stream_package():
+    src = (
+        "from repro.core import coo_to_scv_tiles\n"
+        "def build(coo):\n"
+        "    return coo_to_scv_tiles(coo, 64)\n"
+    )
+    # rebuilds are the whole point everywhere else
+    assert _rules(src, "src/repro/serve/graph_engine.py") == []
+    assert _rules(src, "benchmarks/stream_bench.py") == []
+    assert _rules(src, "tests/test_stream.py") == []
+
+
+# ---------------------------------------------------------------------------
 # pragmas, baseline, CLI
 # ---------------------------------------------------------------------------
 def test_pragma_suppression():
@@ -223,7 +254,9 @@ def test_main_exit_codes(tmp_path):
 
 
 def test_rules_registry_complete():
-    assert set(RULES) == {"SCV001", "SCV002", "SCV003", "SCV004", "SCV005"}
+    assert set(RULES) == {
+        "SCV001", "SCV002", "SCV003", "SCV004", "SCV005", "SCV006",
+    }
 
 
 # ---------------------------------------------------------------------------

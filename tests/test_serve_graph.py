@@ -22,6 +22,7 @@ from repro.serve.graph_engine import (
     assemble_batched_graph,
 )
 from repro.simul.datasets import gcn_normalize, powerlaw_graph
+from repro.stream import DeltaBatch
 
 
 def _graphs(sizes, seed=0):
@@ -459,6 +460,187 @@ def test_engine_partial_completions_survive_failed_run(rng):
         eng.run()
     assert [r.rid for r in eng.last_completed] == [0]
     assert eng.last_completed[0].out is not None
+
+
+# ---------------------------------------------------------------------------
+# delta-tracked graphs: update(), revalidation, staleness
+# ---------------------------------------------------------------------------
+def _value_update(adj, idx, val):
+    coords = [(int(adj.rows[i]), int(adj.cols[i])) for i in idx]
+    return DeltaBatch.of(inserts=[(r, c, val) for r, c in coords],
+                         removes=coords)
+
+
+def test_engine_update_unknown_graph_raises(rng):
+    eng, _, _ = _engine()
+    with pytest.raises(KeyError, match="unknown graph_id"):
+        eng.update("nope", DeltaBatch.of(inserts=[(0, 1, 1.0)]))
+    with pytest.raises(KeyError, match="unknown graph_id"):
+        eng.tracked_adj("nope")
+
+
+def test_engine_tracked_adj_follows_updates(rng):
+    adj = _graphs([40], seed=11)[0]
+    eng, _, _ = _engine()
+    x = rng.standard_normal((adj.shape[0], 8)).astype(np.float32)
+    eng.submit(GraphRequest(rid=0, graph_id="g", adj=adj, x=x, model="gcn"))
+    assert eng.tracked_adj("g") is adj
+    d = _value_update(adj, [0], 9.0)
+    eng.update("g", d)
+    cur = eng.tracked_adj("g")
+    assert cur is not adj and float(cur.vals[0]) == 9.0
+
+
+def test_engine_tracked_request_requires_registration(rng):
+    eng, _, _ = _engine()
+    x = np.zeros((30, 8), np.float32)
+    with pytest.raises(KeyError, match="unknown graph_id"):
+        eng.submit(GraphRequest(rid=0, x=x, model="gcn", graph_id="g0"))
+    with pytest.raises(ValueError, match="needs adj"):
+        eng.submit(GraphRequest(rid=0, x=x, model="gcn"))
+
+
+def test_engine_update_admission_mirrors_check_delta(rng):
+    # check_delta runs against the *tracked* adjacency before any state
+    # changes: out-of-range ids, non-finite vals, absent removes,
+    # already-present inserts all bounce
+    eng, _, _ = _engine()
+    adj = _graphs([30], seed=41)[0]
+    x = np.zeros((30, 8), np.float32)
+    eng.submit(GraphRequest(rid=0, adj=adj, x=x, model="gcn", graph_id="g0"))
+    eng.run()
+    with pytest.raises(ValueError, match="out of range"):
+        eng.update("g0", DeltaBatch.of(inserts=[(99, 0, 1.0)]))
+    with pytest.raises(ValueError, match="finite"):
+        eng.update("g0", DeltaBatch.of(inserts=[(0, 0, np.nan)]))
+    have = set(zip(adj.rows.tolist(), adj.cols.tolist()))
+    absent = next((r, c) for r in range(30) for c in range(30)
+                  if (r, c) not in have)
+    with pytest.raises(ValueError, match="absent edge"):
+        eng.update("g0", DeltaBatch.of(removes=[absent]))
+    r0, c0 = int(adj.rows[0]), int(adj.cols[0])
+    with pytest.raises(ValueError, match="already-present"):
+        eng.update("g0", DeltaBatch.of(inserts=[(r0, c0, 1.0)]))
+    with pytest.raises(ValueError, match="duplicate insert"):
+        eng.update("g0", DeltaBatch.of(
+            inserts=[(absent[0], absent[1], 1.0), (absent[0], absent[1], 2.0)]
+        ))
+    # nothing landed: the tracked state is untouched
+    assert eng.metrics()["graph_updates"] == 0
+
+
+def test_engine_submit_update_submit_serves_post_delta(rng):
+    # the staleness fix: after update(), a tracked request must be served
+    # from the post-delta adjacency — never a stale cached plan
+    adj = _graphs([50], seed=43)[0]
+    x = rng.standard_normal((50, 8)).astype(np.float32)
+    eng, params, cfg = _engine()
+    eng.submit(GraphRequest(rid=0, adj=adj, x=x, model="gcn", graph_id="g0"))
+    out_pre = eng.run()[0].out
+
+    d = _value_update(adj, [0, 1, 2], 3.5)
+    eng.update("g0", d)
+    eng.submit(GraphRequest(rid=1, x=x, model="gcn", graph_id="g0"))
+    out_post = eng.run()[0].out
+
+    from repro.stream import apply_coo
+
+    final = apply_coo(adj, d)
+    bucket_caps = tuple(eng.cfg.bucket_caps) or None
+    ref = np.asarray(gnn_forward(
+        params, cfg,
+        build_graph(final, tile=64,
+                    backend_cap=None if bucket_caps else eng.cfg.cap,
+                    bucket_caps=bucket_caps),
+        jnp.asarray(x),
+    ))
+    np.testing.assert_allclose(out_post, ref, atol=1e-5, rtol=1e-5)
+    assert np.abs(out_post - out_pre).max() > 0  # the delta is visible
+    m = eng.metrics()
+    assert m["plan_cache_revalidated"] == 1  # patched, not a full miss
+    assert m["graph_updates"] == 1
+
+
+def test_engine_update_between_submit_and_run(rng):
+    # adjacency resolves at wave time: an update landing after submit but
+    # before run() is reflected in the served output
+    adj = _graphs([50], seed=47)[0]
+    x = rng.standard_normal((50, 8)).astype(np.float32)
+    eng, params, cfg = _engine()
+    eng.submit(GraphRequest(rid=0, adj=adj, x=x, model="gcn", graph_id="g0"))
+    eng.run()
+    d = _value_update(adj, [0, 1], 9.0)
+    eng.submit(GraphRequest(rid=1, x=x, model="gcn", graph_id="g0"))
+    eng.update("g0", d)  # lands while rid=1 is queued
+    out = eng.run()[0].out
+
+    from repro.stream import apply_coo
+
+    bucket_caps = tuple(eng.cfg.bucket_caps) or None
+    ref = np.asarray(gnn_forward(
+        params, cfg,
+        build_graph(apply_coo(adj, d), tile=64,
+                    backend_cap=None if bucket_caps else eng.cfg.cap,
+                    bucket_caps=bucket_caps),
+        jnp.asarray(x),
+    ))
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_engine_update_invalidates_composite_batches(rng):
+    # composite keys combine member keys, so a delta on one tracked member
+    # re-keys every batch it rides in — co-batched outputs stay fresh
+    adjs = _graphs([40, 40], seed=53)
+    xs = _features(rng, adjs, 8)
+    eng, params, cfg = _engine()
+    eng.submit(GraphRequest(rid=0, adj=adjs[0], x=xs[0], model="gcn",
+                            graph_id="g0"))
+    eng.submit(GraphRequest(rid=1, adj=adjs[1], x=xs[1], model="gcn"))
+    eng.run()
+
+    d = _value_update(adjs[0], [0, 1, 2, 3], 5.0)
+    eng.update("g0", d)
+    eng.submit(GraphRequest(rid=2, x=xs[0], model="gcn", graph_id="g0"))
+    eng.submit(GraphRequest(rid=3, adj=adjs[1], x=xs[1], model="gcn"))
+    done = {r.rid: r.out for r in eng.run()}
+
+    from repro.stream import apply_coo
+
+    bucket_caps = tuple(eng.cfg.bucket_caps) or None
+    ref = np.asarray(gnn_forward(
+        params, cfg,
+        build_graph(apply_coo(adjs[0], d), tile=64,
+                    backend_cap=None if bucket_caps else eng.cfg.cap,
+                    bucket_caps=bucket_caps),
+        jnp.asarray(xs[0]),
+    ))
+    np.testing.assert_allclose(done[2], ref, atol=1e-5, rtol=1e-5)
+
+
+def test_engine_reregister_resets_tracked_state(rng):
+    # a request carrying both adj and graph_id resets the tracked graph
+    adj = _graphs([40], seed=59)[0]
+    x = rng.standard_normal((40, 8)).astype(np.float32)
+    eng, _, _ = _engine()
+    eng.submit(GraphRequest(rid=0, adj=adj, x=x, model="gcn", graph_id="g0"))
+    eng.run()
+    eng.update("g0", _value_update(adj, [0], 2.0))
+    key_after_update = eng._graphs["g0"].key
+    eng.submit(GraphRequest(rid=1, adj=adj, x=x, model="gcn", graph_id="g0"))
+    assert eng._graphs["g0"].key != key_after_update  # back to content key
+    out = eng.run()[0].out
+    assert np.isfinite(out).all()
+
+
+def test_engine_empty_delta_is_a_noop(rng):
+    adj = _graphs([40], seed=61)[0]
+    x = np.zeros((40, 8), np.float32)
+    eng, _, _ = _engine()
+    eng.submit(GraphRequest(rid=0, adj=adj, x=x, model="gcn", graph_id="g0"))
+    eng.run()
+    key = eng._graphs["g0"].key
+    assert eng.update("g0", DeltaBatch.of()) == key
+    assert eng.metrics()["graph_updates"] == 0
 
 
 def test_engine_mixed_model_kinds_batch_separately(rng):

@@ -1,0 +1,428 @@
+"""stream/ delta plan maintenance: admission, COO semantics, byte-exact
+parity with from-scratch rebuilds at every plan layer, in-place patching,
+and identity preservation of untouched device leaves."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.formats import COOMatrix
+from repro.core.scv import (
+    coo_to_scv_tiles,
+    plan_from_tiles,
+    plan_from_tiles_bucketed,
+)
+from repro.core.validate import validate_plan
+from repro.models.gnn import build_graph
+from repro.stream import DeltaBatch, apply_coo, apply_delta, check_delta
+
+TILE = 16
+CAPS = (4, 16, 64)
+
+
+def _random_coo(rng, n, density):
+    total = n * n
+    k = max(1, int(total * density))
+    flat = rng.choice(total, size=k, replace=False)
+    vals = rng.standard_normal(k).astype(np.float32)
+    vals[vals == 0] = 1.0
+    return COOMatrix(
+        rows=(flat // n).astype(np.int32),
+        cols=(flat % n).astype(np.int32),
+        vals=vals,
+        shape=(n, n),
+    )
+
+
+def _random_delta(rng, coo, n_ins, n_rem):
+    """Random inserts at absent coordinates + removes of stored edges."""
+    n = coo.shape[1]
+    have = set(zip(coo.rows.tolist(), coo.cols.tolist()))
+    rem_idx = rng.choice(coo.nnz, size=min(n_rem, coo.nnz), replace=False)
+    removes = [(int(coo.rows[i]), int(coo.cols[i])) for i in rem_idx]
+    inserts = []
+    tries = 0
+    while len(inserts) < n_ins and tries < 10_000:
+        r, c = int(rng.integers(n)), int(rng.integers(n))
+        if (r, c) not in have and all((r, c) != e[:2] for e in inserts):
+            inserts.append((r, c, float(rng.standard_normal() + 2.0)))
+        tries += 1
+    return DeltaBatch.of(inserts=inserts, removes=removes)
+
+
+def _eq_fields(a, b):
+    assert type(a) is type(b)
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if va is None or vb is None:
+            assert va is vb, f.name
+        elif hasattr(va, "dtype"):
+            va, vb = np.asarray(va), np.asarray(vb)
+            assert va.dtype == vb.dtype and np.array_equal(va, vb), f.name
+        elif isinstance(va, tuple) and va and dataclasses.is_dataclass(va[0]):
+            assert len(va) == len(vb), f.name
+            for sa, sb in zip(va, vb):
+                _eq_fields(sa, sb)
+        else:
+            assert va == vb, f.name
+
+
+# ---------------------------------------------------------------------------
+# DeltaBatch / check_delta admission
+# ---------------------------------------------------------------------------
+def test_delta_batch_of_and_len():
+    d = DeltaBatch.of(inserts=[(0, 1, 2.0)], removes=[(3, 4), (5, 6)])
+    assert (d.n_insert, d.n_remove, len(d)) == (1, 2, 3)
+    assert len(DeltaBatch.of()) == 0
+
+
+def test_delta_signature_framed():
+    a = DeltaBatch.of(inserts=[(1, 2, 3.0)])
+    b = DeltaBatch.of(inserts=[(1, 2, 3.0)])
+    c = DeltaBatch.of(removes=[(1, 2)])
+    assert a.signature() == b.signature()
+    assert a.signature() != c.signature()
+    # same bytes, different op: inserts vs removes must never collide
+    d = DeltaBatch.of(inserts=[(1, 2, 3.0)], removes=[(9, 9)])
+    assert a.signature() != d.signature()
+
+
+def test_check_delta_rejects_out_of_range_ids():
+    with pytest.raises(ValueError, match="out of range"):
+        check_delta(DeltaBatch.of(inserts=[(99, 0, 1.0)]), shape=(8, 8))
+    with pytest.raises(ValueError, match="non-negative"):
+        check_delta(DeltaBatch.of(removes=[(-1, 0)]), shape=(8, 8))
+
+
+def test_check_delta_rejects_non_finite_vals():
+    with pytest.raises(ValueError, match="finite"):
+        check_delta(DeltaBatch.of(inserts=[(0, 0, np.nan)]), shape=(8, 8))
+    with pytest.raises(ValueError, match="finite"):
+        check_delta(DeltaBatch.of(inserts=[(0, 0, np.inf)]), shape=(8, 8))
+
+
+def test_check_delta_rejects_duplicates():
+    with pytest.raises(ValueError, match="duplicate insert"):
+        check_delta(DeltaBatch.of(inserts=[(0, 1, 1.0), (0, 1, 2.0)]))
+    with pytest.raises(ValueError, match="duplicate remove"):
+        check_delta(DeltaBatch.of(removes=[(0, 1), (0, 1)]))
+
+
+def test_check_delta_rejects_length_mismatch():
+    d = DeltaBatch(
+        ins_rows=np.array([0], np.int32),
+        ins_cols=np.array([0, 1], np.int32),
+        ins_vals=np.array([1.0], np.float32),
+        rem_rows=np.zeros(0, np.int32),
+        rem_cols=np.zeros(0, np.int32),
+    )
+    with pytest.raises(ValueError, match="disagree on length"):
+        check_delta(d)
+
+
+def test_check_delta_presence_against_coo(rng):
+    coo = _random_coo(rng, 16, 0.1)
+    r0, c0 = int(coo.rows[0]), int(coo.cols[0])
+    have = set(zip(coo.rows.tolist(), coo.cols.tolist()))
+    absent = next((r, c) for r in range(16) for c in range(16)
+                  if (r, c) not in have)
+    with pytest.raises(ValueError, match="absent edge"):
+        check_delta(DeltaBatch.of(removes=[absent]), coo=coo)
+    with pytest.raises(ValueError, match="already-present"):
+        check_delta(DeltaBatch.of(inserts=[(r0, c0, 1.0)]), coo=coo)
+    # the value-update idiom is admitted: remove + insert the same coord
+    check_delta(
+        DeltaBatch.of(inserts=[(r0, c0, 9.0)], removes=[(r0, c0)]), coo=coo
+    )
+
+
+# ---------------------------------------------------------------------------
+# apply_coo: the canonical (hole-filling) final ordering
+# ---------------------------------------------------------------------------
+def test_apply_coo_value_update_keeps_positions(rng):
+    coo = _random_coo(rng, 20, 0.1)
+    i = 2
+    d = DeltaBatch.of(
+        inserts=[(int(coo.rows[i]), int(coo.cols[i]), 42.0)],
+        removes=[(int(coo.rows[i]), int(coo.cols[i]))],
+    )
+    out = apply_coo(coo, d)
+    assert np.array_equal(out.rows, coo.rows)
+    assert np.array_equal(out.cols, coo.cols)
+    assert out.vals[i] == 42.0
+    mask = np.ones(coo.nnz, bool)
+    mask[i] = False
+    assert np.array_equal(out.vals[mask], coo.vals[mask])
+
+
+def test_apply_coo_insert_fills_hole_then_appends(rng):
+    coo = _random_coo(rng, 20, 0.1)
+    # remove position 1, insert two fresh edges: first insert takes the
+    # hole at position 1, second appends at the tail
+    have = set(zip(coo.rows.tolist(), coo.cols.tolist()))
+    fresh = [(r, c) for r in range(20) for c in range(20)
+             if (r, c) not in have][:2]
+    d = DeltaBatch.of(
+        inserts=[(fresh[0][0], fresh[0][1], 5.0),
+                 (fresh[1][0], fresh[1][1], 6.0)],
+        removes=[(int(coo.rows[1]), int(coo.cols[1]))],
+    )
+    out = apply_coo(coo, d)
+    assert out.nnz == coo.nnz + 1
+    assert (int(out.rows[1]), int(out.cols[1])) == fresh[0]
+    assert (int(out.rows[-1]), int(out.cols[-1])) == fresh[1]
+    # everything else untouched, in place
+    mask = np.ones(coo.nnz, bool)
+    mask[1] = False
+    assert np.array_equal(out.rows[:-1][mask], coo.rows[mask])
+
+
+def test_apply_coo_shrink_moves_only_tail(rng):
+    coo = _random_coo(rng, 20, 0.2)
+    # remove two low positions: the last two survivors back-fill the holes
+    d = DeltaBatch.of(removes=[(int(coo.rows[0]), int(coo.cols[0])),
+                               (int(coo.rows[3]), int(coo.cols[3]))])
+    out = apply_coo(coo, d)
+    L = coo.nnz - 2
+    assert out.nnz == L
+    # survivors below L that were not removed keep their exact position
+    for j in range(L):
+        if j in (0, 3):
+            continue
+        assert out.rows[j] == coo.rows[j] and out.cols[j] == coo.cols[j]
+    # holes 0 and 3 hold the moved tail survivors, ascending
+    assert (int(out.rows[0]), int(out.cols[0])) == \
+        (int(coo.rows[L]), int(coo.cols[L]))
+    assert (int(out.rows[3]), int(out.cols[3])) == \
+        (int(coo.rows[L + 1]), int(coo.cols[L + 1]))
+
+
+# ---------------------------------------------------------------------------
+# byte-exact parity: apply_delta(build(adj), d) == build(apply_coo(adj, d))
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_ins,n_rem", [(0, 5), (5, 0), (7, 7), (3, 9), (9, 3)])
+def test_parity_all_layers(rng, n_ins, n_rem):
+    coo = _random_coo(rng, 257, 0.004)
+    d = _random_delta(rng, coo, n_ins, n_rem)
+    final = apply_coo(coo, d)
+
+    t1 = apply_delta(coo_to_scv_tiles(coo, tile=TILE, cap=CAPS[-1]), d)
+    _eq_fields(t1, coo_to_scv_tiles(final, tile=TILE, cap=CAPS[-1]))
+
+    p1 = apply_delta(plan_from_tiles(coo_to_scv_tiles(coo, TILE, cap=CAPS[-1])), d)
+    _eq_fields(p1, plan_from_tiles(coo_to_scv_tiles(final, TILE, cap=CAPS[-1])))
+
+    b1 = apply_delta(
+        plan_from_tiles_bucketed(coo_to_scv_tiles(coo, TILE, cap=CAPS[-1]), caps=CAPS), d
+    )
+    _eq_fields(
+        b1,
+        plan_from_tiles_bucketed(coo_to_scv_tiles(final, TILE, cap=CAPS[-1]), caps=CAPS),
+    )
+
+
+def test_parity_random_sweep(rng):
+    for trial in range(12):
+        coo = _random_coo(rng, 129, 0.01 + 0.01 * (trial % 3))
+        d = _random_delta(rng, coo, int(rng.integers(0, 10)),
+                          int(rng.integers(0, 10)))
+        if len(d) == 0:
+            continue
+        final = apply_coo(coo, d)
+        t1 = apply_delta(coo_to_scv_tiles(coo, tile=TILE, cap=CAPS[-1]), d)
+        _eq_fields(t1, coo_to_scv_tiles(final, tile=TILE, cap=CAPS[-1]))
+
+
+def test_parity_graph_layer(rng):
+    coo = _random_coo(rng, 130, 0.02)
+    d = _random_delta(rng, coo, 6, 6)
+    final = apply_coo(coo, d)
+    for caps in (None, CAPS):
+        g1 = apply_delta(build_graph(coo, tile=TILE, bucket_caps=caps), d)
+        g_ref = build_graph(final, tile=TILE, bucket_caps=caps)
+        _eq_fields(g1.plan, g_ref.plan)
+        for f in ("rows", "cols", "vals"):
+            assert np.array_equal(
+                np.asarray(getattr(g1, f)), np.asarray(getattr(g_ref, f))
+            ), f
+
+
+def test_parity_tile_birth_and_death(rng):
+    # a delta that empties one tile entirely and creates a brand-new one
+    coo = COOMatrix(
+        rows=np.array([0, 1, 40], np.int32),
+        cols=np.array([0, 1, 40], np.int32),
+        vals=np.ones(3, np.float32),
+        shape=(64, 64),
+    )
+    d = DeltaBatch.of(inserts=[(60, 60, 2.0)], removes=[(40, 40)])
+    final = apply_coo(coo, d)
+    t1 = apply_delta(coo_to_scv_tiles(coo, tile=TILE, cap=4), d)
+    _eq_fields(t1, coo_to_scv_tiles(final, tile=TILE, cap=4))
+
+
+def test_parity_chain_growth(rng):
+    # inserts overflowing one tile's chunk so the chain grows
+    coo = _random_coo(rng, 32, 0.05)
+    tile0 = (int(coo.rows[0]) // TILE * TILE, int(coo.cols[0]) // TILE * TILE)
+    have = set(zip(coo.rows.tolist(), coo.cols.tolist()))
+    ins = []
+    for r in range(tile0[0], tile0[0] + TILE):
+        for c in range(tile0[1], tile0[1] + TILE):
+            if (r, c) not in have and len(ins) < 9:
+                ins.append((r, c, 1.5))
+    d = DeltaBatch.of(inserts=ins)
+    final = apply_coo(coo, d)
+    t1 = apply_delta(coo_to_scv_tiles(coo, tile=TILE, cap=4), d)
+    _eq_fields(t1, coo_to_scv_tiles(final, tile=TILE, cap=4))
+
+
+def test_parity_chain_tail_in_lower_bucket(rng):
+    # a heavy tile whose chain-split tail lands in a LOWER capacity
+    # bucket than its full chunks (282 nnz at caps=(8, 32, 128): chunks
+    # 128+128 in the top segment, the 26-tail in cap=32).  The chain
+    # check must read chunks in descending-cap reconstruction order or
+    # it misreads the tail as a mid-chain partial chunk (the
+    # examples/serve_gnn.py live-mutation regression).
+    caps = (8, 32, 128)
+    coo = _random_coo(rng, 60, 282 / (60 * 60))
+    assert coo.nnz > 2 * caps[-1]  # needs >= 2 full chunks + a tail
+    d = DeltaBatch.of(
+        inserts=[(int(coo.rows[0]), int(coo.cols[0]), 9.0)],
+        removes=[(int(coo.rows[0]), int(coo.cols[0]))],
+    )
+    final = apply_coo(coo, d)
+    b1 = apply_delta(
+        plan_from_tiles_bucketed(coo_to_scv_tiles(coo, 64, cap=caps[-1]),
+                                 caps=caps), d
+    )
+    _eq_fields(
+        b1,
+        plan_from_tiles_bucketed(coo_to_scv_tiles(final, 64, cap=caps[-1]),
+                                 caps=caps),
+    )
+
+
+def test_source_and_scan_paths_agree(rng):
+    # net-shrinking delta: moved tail survivors must be located — by
+    # coordinate arithmetic (source=) and by the perm-scan fallback alike
+    coo = _random_coo(rng, 257, 0.01)
+    d = _random_delta(rng, coo, 0, 12)
+    t0 = coo_to_scv_tiles(coo, tile=TILE, cap=CAPS[-1])
+    t_src = apply_delta(t0, d, source=coo)
+    t_scan = apply_delta(t0, d)
+    _eq_fields(t_src, t_scan)
+    _eq_fields(
+        t_src, coo_to_scv_tiles(apply_coo(coo, d), tile=TILE, cap=CAPS[-1])
+    )
+
+
+# ---------------------------------------------------------------------------
+# in-place fast path + identity preservation
+# ---------------------------------------------------------------------------
+def test_inplace_layout_equal_returns_same_object(rng):
+    coo = _random_coo(rng, 64, 0.05)
+    t = coo_to_scv_tiles(coo, tile=TILE, cap=CAPS[-1])
+    i = 1
+    d = DeltaBatch.of(
+        inserts=[(int(coo.rows[i]), int(coo.cols[i]), 9.5)],
+        removes=[(int(coo.rows[i]), int(coo.cols[i]))],
+    )
+    out = apply_delta(t, d, inplace=True)
+    assert out is t
+    _eq_fields(t, coo_to_scv_tiles(apply_coo(coo, d), tile=TILE, cap=CAPS[-1]))
+
+
+def test_inplace_layout_change_returns_fresh_object():
+    # all edges in the top-left tile; the insert births a fresh tile
+    coo = COOMatrix(
+        rows=np.array([0, 1, 2], np.int32),
+        cols=np.array([3, 4, 5], np.int32),
+        vals=np.ones(3, np.float32),
+        shape=(64, 64),
+    )
+    t = coo_to_scv_tiles(coo, tile=TILE, cap=CAPS[-1])
+    d = DeltaBatch.of(inserts=[(50, 50, 1.0)])
+    out = apply_delta(t, d, inplace=True)
+    assert out is not t  # tile birth: layout changed
+    _eq_fields(out, coo_to_scv_tiles(apply_coo(coo, d), tile=TILE, cap=CAPS[-1]))
+
+
+def test_inplace_rejected_on_plans(rng):
+    coo = _random_coo(rng, 64, 0.05)
+    p = plan_from_tiles(coo_to_scv_tiles(coo, TILE, cap=CAPS[-1]))
+    with pytest.raises(ValueError, match="inplace"):
+        apply_delta(p, DeltaBatch.of(inserts=[(0, 0, 1.0)]), inplace=True)
+
+
+def test_untouched_bucketed_segments_kept_by_identity(rng):
+    # a one-tile value update must leave every segment the delta doesn't
+    # re-chunk as the SAME object (device arrays, jit traces survive)
+    coo = _random_coo(rng, 257, 0.01)
+    b = plan_from_tiles_bucketed(
+        coo_to_scv_tiles(coo, TILE, cap=CAPS[-1]), caps=CAPS
+    )
+    i = 0
+    d = DeltaBatch.of(
+        inserts=[(int(coo.rows[i]), int(coo.cols[i]), 3.0)],
+        removes=[(int(coo.rows[i]), int(coo.cols[i]))],
+    )
+    b2 = apply_delta(b, d)
+    shared = sum(a is c for a, c in zip(b.segments, b2.segments))
+    assert shared >= len(b.segments) - 1  # at most one segment re-chunked
+
+
+def test_empty_delta_returns_same_object(rng):
+    coo = _random_coo(rng, 64, 0.05)
+    t = coo_to_scv_tiles(coo, tile=TILE, cap=CAPS[-1])
+    assert apply_delta(t, DeltaBatch.of()) is t
+
+
+# ---------------------------------------------------------------------------
+# error paths
+# ---------------------------------------------------------------------------
+def test_remove_absent_edge_raises(rng):
+    coo = _random_coo(rng, 32, 0.05)
+    have = set(zip(coo.rows.tolist(), coo.cols.tolist()))
+    absent = next((r, c) for r in range(32) for c in range(32)
+                  if (r, c) not in have)
+    t = coo_to_scv_tiles(coo, tile=TILE, cap=CAPS[-1])
+    with pytest.raises(ValueError, match="absent edge"):
+        apply_delta(t, DeltaBatch.of(removes=[absent]))
+
+
+def test_insert_present_edge_raises(rng):
+    coo = _random_coo(rng, 32, 0.05)
+    t = coo_to_scv_tiles(coo, tile=TILE, cap=CAPS[-1])
+    d = DeltaBatch.of(inserts=[(int(coo.rows[0]), int(coo.cols[0]), 1.0)])
+    with pytest.raises(ValueError, match="remove it in the same batch"):
+        apply_delta(t, d, check=False)  # the splice itself also rejects
+
+
+def test_plan_without_perm_raises(rng):
+    coo = _random_coo(rng, 32, 0.05)
+    p = plan_from_tiles(coo_to_scv_tiles(coo, TILE, cap=CAPS[-1]))
+    p = dataclasses.replace(p, perm=None)
+    with pytest.raises(ValueError, match="perm"):
+        apply_delta(p, DeltaBatch.of(inserts=[(0, 0, 1.0)]))
+
+
+def test_unknown_object_raises():
+    with pytest.raises(TypeError, match="cannot patch"):
+        apply_delta(object(), DeltaBatch.of(inserts=[(0, 0, 1.0)]), check=False)
+
+
+# ---------------------------------------------------------------------------
+# validate_plan stays green on patched plans
+# ---------------------------------------------------------------------------
+def test_patched_plans_validate_green(rng):
+    coo = _random_coo(rng, 129, 0.02)
+    d = _random_delta(rng, coo, 5, 5)
+    final = apply_coo(coo, d)
+    tiles = coo_to_scv_tiles(coo, TILE, cap=CAPS[-1])
+
+    p1 = apply_delta(plan_from_tiles(tiles), d)
+    validate_plan(p1, coo=final).raise_if_failed()
+
+    b1 = apply_delta(plan_from_tiles_bucketed(tiles, caps=CAPS), d)
+    validate_plan(b1, coo=final).raise_if_failed()

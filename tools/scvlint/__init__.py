@@ -31,6 +31,13 @@ Rules (all stdlib ``ast`` + ``tokenize``; no third-party dependency):
   ``jax.lax.fori_loop``: jax (0.4.x and current) raises ``ValueError``
   for unrolled loops with traced bounds, and kernel trip counts are
   prefetched data (the PR 2 breakage this rule fossilizes).
+* **SCV006 stream-no-rebuild** — no full-rebuild entry points
+  (``coo_to_scv_tiles`` / ``plan_from_tiles`` /
+  ``plan_from_tiles_bucketed`` / ``build_graph``) called inside
+  ``src/repro/stream/``.  The delta package exists to *patch* plans in
+  sub-rebuild time; a rebuild call hiding inside it silently converts
+  the O(delta) contract back into the O(nnz) path it replaces.  Tests
+  and benchmarks rebuild freely — the rule is scoped to the package.
 
 Suppression: append ``# scvlint: ignore[SCV00N]`` (or a bare
 ``# scvlint: ignore``) to the offending line.  Pre-existing violations
@@ -58,7 +65,16 @@ RULES = {
     "SCV003": "nondiff_argnums names a plan-leaf parameter",
     "SCV004": "jax import shim lacks a version-pin audit comment",
     "SCV005": "fori_loop(unroll=) raises with traced bounds",
+    "SCV006": "full plan rebuild called inside src/repro/stream/",
 }
+
+#: Full-rebuild entry points the stream/ delta package must never call
+#: (SCV006) — patching that falls back to a rebuild is a silent
+#: O(delta) -> O(nnz) regression.
+REBUILD_ENTRY_POINTS = frozenset(
+    {"coo_to_scv_tiles", "plan_from_tiles", "plan_from_tiles_bucketed",
+     "build_graph"}
+)
 
 #: SCVPlan / SCVTiles leaf parameter names (SCV003).
 PLAN_LEAF_NAMES = frozenset(
@@ -227,6 +243,7 @@ class FileChecker:
         self._check_nondiff_plan(tree, out)
         self._check_shim_hygiene(tree, out)
         self._check_fori_unroll(tree, out)
+        self._check_stream_no_rebuild(tree, out)
         return out
 
     # -- SCV001 ------------------------------------------------------------
@@ -386,6 +403,23 @@ class FileChecker:
                             "traced bounds (jax 0.4.x and current); kernel "
                             "trip counts are prefetched data — drop it",
                         )
+
+    # -- SCV006 ------------------------------------------------------------
+    def _check_stream_no_rebuild(self, tree: ast.Module, out: list[Violation]):
+        rel = self.rel.replace("\\", "/")
+        if "repro/stream/" not in rel:
+            return
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            last = _dotted(node.func).rsplit(".", 1)[-1]
+            if last in REBUILD_ENTRY_POINTS:
+                self._emit(
+                    out, node, "SCV006",
+                    f"`{last}` is a full O(nnz) plan rebuild — stream/ "
+                    "patches plans in O(delta); splice the change in "
+                    "instead of rebuilding",
+                )
 
 
 # ---------------------------------------------------------------------------
