@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregate import aggregate_scv_plan
-from repro.core.exec import PlanExecutor, ShardingDecision
+from repro.core.exec import PlanExecutor, ShardingDecision, placement_bytes
 from repro.core.scv import (
     bucket_caps_for,
     coo_to_scv_tiles,
@@ -65,6 +65,17 @@ IMBALANCE_GATE = 1.5
 #: single-device bucketed time (8 fakes time-slice one CPU; the collective
 #: and dispatch overhead is what this bounds).
 MAX_OVERHEAD = 6.0
+#: Gates on the feature-axis placement specifically.  Pad-once Z slabs +
+#: skipping the psum at tile_parts == 1 cut the features wall time ~14%
+#: (5.14s -> ~4.4s on this host), but coverage-free plans sped the
+#: single-device denominator even more (1.71s -> ~1.35s), so the *ratio*
+#: sits near 2.8-3.4 with CPU time-slicing noise: each of the 8 fake
+#: devices repeats the full O(nnz) index walk on its narrow slab, which
+#: the feature axis cannot divide — parity with the t8f1 tile placement
+#: is not reachable in emulation.  The ratio gate bounds regression; the
+#: absolute gate holds the measured wall-time win on this host.
+FEATURES_OVERHEAD_GATE = 3.6
+FEATURES_SECONDS_GATE = 5.0
 
 DECISIONS = (
     ShardingDecision("tiles", 8, 1),
@@ -116,6 +127,25 @@ def main() -> int:
         out = np.asarray(agg(sp, z))
         exact = bool(np.array_equal(out, single))
         imb = sp.imbalance
+        # VMEM model check: predicted per-device resident bytes (the
+        # ShardingDecision cost model) vs the placed plan's actual
+        # leaves.  ``plan`` compares the modeled COO triple only — the
+        # actual number includes capacity-slot padding, so actual >=
+        # predicted and the ratio measures the model's optimism.
+        pred = placement_bytes(
+            int(adj.nnz), FEATURES, dec.tile_parts, dec.feature_parts,
+            n_rows=N_NODES,
+        )
+        actual_plan = sum(
+            seg.rows.nbytes + seg.cols.nbytes + seg.vals.nbytes
+            for seg in sp.segments
+        ) / dec.tile_parts
+        actual = {
+            "plan": actual_plan,
+            "z_slab": z.nbytes / dec.feature_parts,
+            "out": N_NODES * FEATURES * 4 / dec.feature_parts,
+        }
+        actual["resident"] = sum(actual.values())
         rows.append({
             "decision": dec.signature,
             "seconds": t,
@@ -123,10 +153,17 @@ def main() -> int:
             "bit_exact": exact,
             "imbalance": imb,
             "imbalance_per_segment": list(sp.imbalance_per_segment),
+            "vmem_predicted_bytes": {
+                k: pred[k] for k in ("plan", "z_slab", "out", "resident")
+            },
+            "vmem_actual_bytes": actual,
+            "vmem_actual_over_predicted":
+                actual["resident"] / pred["resident"],
         })
         print(f"dist_{dec.kind},{t * 1e6:.0f},"
               f"x{t / t_single:.2f} vs single; imb {imb:.3f}; "
-              f"exact {exact}")
+              f"exact {exact}; vmem act/pred "
+              f"{actual['resident'] / pred['resident']:.2f}")
 
     payload = {
         "n_nodes": N_NODES,
@@ -137,6 +174,8 @@ def main() -> int:
         "n_devices": len(jax.devices()),
         "single_bucketed_seconds": t_single,
         "max_overhead_gate": MAX_OVERHEAD,
+        "features_overhead_gate": FEATURES_OVERHEAD_GATE,
+        "features_seconds_gate": FEATURES_SECONDS_GATE,
         "imbalance_gate": IMBALANCE_GATE,
         "placements": rows,
     }
@@ -147,6 +186,9 @@ def main() -> int:
     ok = all(r["bit_exact"] for r in rows)
     ok = ok and all(r["imbalance"] < IMBALANCE_GATE for r in rows)
     ok = ok and max(r["overhead_vs_single"] for r in rows) <= MAX_OVERHEAD
+    feat = next(r for r in rows if r["decision"].startswith("features"))
+    ok = ok and feat["overhead_vs_single"] <= FEATURES_OVERHEAD_GATE
+    ok = ok and feat["seconds"] <= FEATURES_SECONDS_GATE
     print("PASS" if ok else "FAIL")
     return 0 if ok else 1
 

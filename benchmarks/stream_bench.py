@@ -83,8 +83,15 @@ def phase_a(rng, adj):
     # it doesn't have); the tiles advance with every application
     cur = adj
     t_delta = float("inf")
+    t_functional = float("inf")
     for rep in range(3):
         d = value_update_delta(rng, cur, DELTA_EDGES, val=1.0 + rep)
+        # functional (alias-holder) path first: returns a fresh object,
+        # the live tiles are untouched, so the inplace timing below still
+        # applies the delta to exactly the same pre-delta state
+        t0 = time.perf_counter()
+        apply_delta(tiles, d, check=False)
+        t_functional = min(t_functional, time.perf_counter() - t0)
         t0 = time.perf_counter()
         apply_delta(tiles, d, inplace=True, check=False)
         t_delta = min(t_delta, time.perf_counter() - t0)
@@ -105,7 +112,7 @@ def phase_a(rng, adj):
     apply_delta(g, d, check=False)
     t_graph = time.perf_counter() - t0
 
-    return t_build, t_delta, t_rebuild, t_graph, cur
+    return t_build, t_delta, t_functional, t_rebuild, t_graph, cur
 
 
 # ---------------------------------------------------------------------------
@@ -174,7 +181,7 @@ def main() -> int:
     print(f"graph: {adj.nnz} edges over {N_NODES} nodes, tile={TILE}, "
           f"cap={CAP}, delta={DELTA_EDGES} edges")
 
-    t_build, t_delta, t_rebuild, t_graph, _ = phase_a(rng, adj)
+    t_build, t_delta, t_functional, t_rebuild, t_graph, _ = phase_a(rng, adj)
     speedup = t_rebuild / t_delta
 
     results, m, err = phase_b(rng, adj)
@@ -186,6 +193,8 @@ def main() -> int:
           f"{adj.nnz / t_rebuild / 1e6:.2f} Medges/s")
     print(f"stream_apply_delta_{DELTA_EDGES},{t_delta * 1e6:.0f},"
           f"x{speedup:.0f} vs rebuild")
+    print(f"stream_apply_functional_{DELTA_EDGES},{t_functional * 1e6:.0f},"
+          f"x{t_functional / t_delta:.1f} vs inplace")
     print(f"stream_graph_patch_{DELTA_EDGES},{t_graph * 1e6:.0f},"
           f"bucketed serve plan")
     for r in results:
@@ -197,6 +206,8 @@ def main() -> int:
           f"{t_build:.3f} s)")
     print(f"apply_delta (tiles) : {t_delta:7.3f} s  (x{speedup:.0f}, "
           "byte-identical to rebuild)")
+    print(f"apply_delta (func)  : {t_functional:7.3f} s  (alias-holder "
+          "path: copies written leaves)")
     print(f"apply_delta (graph) : {t_graph:7.3f} s  (bucketed serve plan, "
           "functional)")
     for r in results:
@@ -216,6 +227,7 @@ def main() -> int:
         "delta_edges": DELTA_EDGES,
         "t_rebuild_s": t_rebuild,
         "t_apply_delta_s": t_delta,
+        "t_apply_functional_s": t_functional,
         "t_graph_patch_s": t_graph,
         "speedup": speedup,
         "min_speedup": MIN_SPEEDUP,

@@ -29,6 +29,7 @@ from repro.core.exec import (
     ShardingDecision,
     aggregate_sharded,
     decide_sharding,
+    placement_bytes,
 )
 from repro.core.morton import morton_decode, morton_encode, morton_order, zcurve_tiles
 from repro.core.partition import (

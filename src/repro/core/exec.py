@@ -72,6 +72,11 @@ MIN_NNZ_PER_PART = 4096
 #: so splitting below this floor multiplies total work instead of
 #: dividing it.
 MIN_FEATURES_PER_PART = 128
+#: Fallback output-row estimate when the caller only knows nnz: the SCV
+#: target regime is sparse power-law graphs with average degree around 8
+#: (paper §V datasets), so ``n_rows ~ nnz / 8``.  Pass ``n_rows``
+#: explicitly for an exact byte model.
+EST_AVG_DEGREE = 8
 
 
 # ---------------------------------------------------------------------------
@@ -115,35 +120,126 @@ class ShardingDecision:
         return f"{self.kind}:t{self.tile_parts}f{self.feature_parts}"
 
 
+def placement_bytes(
+    nnz: int,
+    n_features: int,
+    tile_parts: int,
+    feature_parts: int,
+    *,
+    n_rows: Optional[int] = None,
+    machine=None,
+) -> dict:
+    """Per-device byte model of a ``(tile_parts, feature_parts)`` placement.
+
+    The model charges each device for what it must hold (VMEM residency)
+    and move (HBM traffic); ``simul.machine.MachineConfig`` supplies the
+    element width and DRAM bandwidth — one shared set of hardware
+    constants between the cycle simulator and the executor.
+
+    Resident bytes (what a device's slabs occupy):
+
+    * ``plan``   — the span's COO triples (rows, cols, vals): the tile
+      axis splits nnz, so ``3 * nnz * B / tp``; replicated across the
+      feature axis.
+    * ``z_slab`` — the feature slab ``Z[:, f0:f1]``: split by the feature
+      axis, replicated across the tile axis.
+    * ``out``    — the output accumulator slab, same split as ``z_slab``
+      (every tile span writes the full row range of its feature slab).
+
+    Traffic bytes (what the aggregation streams):
+
+    * ``z_gather``   — the kernel reads one Z row per nonzero entry:
+      ``(nnz / tp) * (F / fp) * B``.  This is the dominant sparse term
+      and the one the tile axis actually divides; the slab-resident view
+      alone would make tile sharding look free-of-benefit.
+    * ``collective`` — ring-allreduce traffic of the boundary ``psum``
+      over the tile axis: ``2 * (tp - 1) / tp`` of the out slab; zero at
+      ``tp == 1`` (the executor skips the psum entirely).
+
+    Returns a dict with those components plus ``resident`` (plan +
+    z_slab + out — the VMEM budget number), ``total`` (plan + z_gather +
+    out + collective — the cost :func:`decide_sharding` minimizes) and
+    ``est_seconds`` (total bits over ``dram_gbps``).  ``n_rows`` defaults
+    to ``nnz // EST_AVG_DEGREE`` when the caller only knows nnz.
+    """
+    if machine is None:
+        from repro.simul.machine import MachineConfig
+
+        machine = MachineConfig()
+    b = machine.bytes_per_elem
+    rows = max(int(n_rows) if n_rows is not None else nnz // EST_AVG_DEGREE, 1)
+    tp, fp = tile_parts, feature_parts
+    plan = 3 * nnz * b / tp
+    z_slab = rows * n_features * b / fp
+    out = rows * n_features * b / fp
+    z_gather = (nnz / tp) * (n_features / fp) * b
+    collective = 2 * (tp - 1) / tp * out
+    total = plan + z_gather + out + collective
+    return {
+        "plan": plan,
+        "z_slab": z_slab,
+        "out": out,
+        "z_gather": z_gather,
+        "collective": collective,
+        "resident": plan + z_slab + out,
+        "total": total,
+        "est_seconds": total * 8 / (machine.dram_gbps * 1e9),
+    }
+
+
 def decide_sharding(
     nnz: int,
     n_features: int,
     n_devices: int,
     *,
+    n_rows: Optional[int] = None,
+    machine=None,
     min_nnz_per_part: int = MIN_NNZ_PER_PART,
     min_features_per_part: int = MIN_FEATURES_PER_PART,
 ) -> ShardingDecision:
-    """Pick tile-span, feature, or 2-D sharding (DESIGN.md §5).
+    """Pick tile-span, feature, or 2-D sharding by byte cost (DESIGN.md §5).
 
-    The tile axis is grown first — graph parallelism is the paper's lever
-    and scales with nnz — doubling while every span keeps at least
-    ``min_nnz_per_part`` nonzeros.  Leftover device factors then go to the
-    feature axis while every slab keeps ``min_features_per_part`` columns.
-    Both axes stay powers of two (mesh factorizations of typical device
-    counts); devices that fit neither floor stay unused — a half-idle mesh
-    beats all-devices-underfed.
+    Candidate meshes are every power-of-two ``(tp, fp)`` with
+    ``tp * fp <= n_devices`` that respects the per-device work floors
+    (``min_nnz_per_part`` nonzeros per span, ``min_features_per_part``
+    columns per slab — splitting below either floor multiplies padded
+    work instead of dividing real work).  Each candidate is priced with
+    :func:`placement_bytes` and the cheapest per-device byte total wins.
+
+    The model encodes the real trade-off the old grow-tiles-first rule
+    missed: the tile axis divides the O(nnz) gather traffic but adds
+    ring-allreduce traffic proportional to the out slab, whereas the
+    feature axis divides the per-entry width and the slabs collective-
+    free.  The optimum balances the two instead of greedily maxing one
+    axis — e.g. at nnz=1e6, F=256 on 8 devices the old rule picked
+    t8f1 while t4f2 moves ~45% fewer bytes per device.  Ties break
+    toward more tile spans (graph parallelism is the paper's lever),
+    then toward fewer devices (a half-idle mesh beats all-devices-
+    underfed).
     """
     if n_devices < 1:
         raise ValueError("n_devices must be >= 1")
-    tp = 1
-    while tp * 2 <= n_devices and nnz // (tp * 2) >= min_nnz_per_part:
-        tp *= 2
-    fp = 1
+    tps = [1]
+    while tps[-1] * 2 <= n_devices and nnz // (tps[-1] * 2) >= min_nnz_per_part:
+        tps.append(tps[-1] * 2)
+    fps = [1]
     while (
-        tp * fp * 2 <= n_devices
-        and n_features // (fp * 2) >= min_features_per_part
+        fps[-1] * 2 <= n_devices
+        and n_features // (fps[-1] * 2) >= min_features_per_part
     ):
-        fp *= 2
+        fps.append(fps[-1] * 2)
+    best = None
+    for tp in tps:
+        for fp in fps:
+            if tp * fp > n_devices:
+                continue
+            cost = placement_bytes(
+                nnz, n_features, tp, fp, n_rows=n_rows, machine=machine
+            )["total"]
+            key = (cost, -tp, tp * fp)
+            if best is None or key < best[0]:
+                best = (key, tp, fp)
+    _, tp, fp = best
     kind = (
         "replicated" if (tp, fp) == (1, 1)
         else "tiles" if fp == 1
@@ -268,13 +364,19 @@ def aggregate_sharded(
 ) -> jnp.ndarray:
     """out = Â Z over a placed plan: ONE ``shard_map`` launch.
 
-    Inside the body each device runs one kernel launch per capacity bucket
-    over its tile span (the same per-segment launches as the single-device
-    bucketed path), sums the local partials, and merges boundary PS
-    block-rows with a **single** ``psum`` over the ``"tiles"`` axis —
-    across all segments, not one collective per segment.  The feature axis
-    needs no collective: each device owns a disjoint ``Z[:, f0:f1]`` slab
-    and writes disjoint output columns (out_specs partitions them back).
+    Inside the body each device chains one kernel launch per capacity
+    bucket over its tile span through a zero-initialized accumulator
+    (``scv_spmm_plan(init="zeros")``): spans carry no per-span coverage
+    dummies, and the aliased-accumulator chain leaves unvisited strips at
+    their accumulator value — zero — so no post-launch masking and no
+    partial-output sum tree.  Boundary PS block-rows merge with a
+    **single** ``psum`` over the ``"tiles"`` axis — across all segments,
+    not one collective per segment, and skipped entirely when the tile
+    axis has one part (pure feature sharding writes disjoint output
+    columns and needs no collective at all).  Z is padded to the slab
+    grid **once**, outside the mesh body (rows to the tile grid, columns
+    to the slab multiple) — per-device per-segment re-padding was two
+    full slab copies per call.
 
     Returns the full (unpadded-row) ``[n_rows, F]`` output, matching
     ``aggregate_scv_plan``.
@@ -285,39 +387,37 @@ def aggregate_sharded(
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     fp = sp.decision.feature_parts
+    tp = sp.decision.tile_parts
     n, f = z.shape
     f_pad = -(-f // fp) * fp  # feature slabs must tile the mesh axis
-    if f_pad != f:
-        z = jnp.zeros((n, f_pad), z.dtype).at[:, :f].set(z)
+    n_pad = sp.padded_shape[1]  # pad rows once, not per device per segment
+    if (n_pad, f_pad) != (n, f):
+        z = jnp.zeros((n_pad, f_pad), z.dtype).at[:n, :f].set(z)
 
     def local(sp_local: ShardedPlan, z_local: jnp.ndarray) -> jnp.ndarray:
-        out = None
-        for seg in sp_local.segments:  # one kernel launch per bucket
-            s = _segment_local(seg)
-            if backend == "jnp":
-                part = scv_ref.scv_spmm_reference_plan(s, z_local)
-            else:
-                part = scv_ops.scv_spmm_plan(
-                    s, z_local, feature_block=feature_block,
-                    interpret=(backend == "pallas_interpret"
-                               or jax.default_backend() != "tpu"),
+        if backend == "jnp":
+            out = None
+            for seg in sp_local.segments:  # one launch per bucket
+                part = scv_ref.scv_spmm_reference_plan(
+                    _segment_local(seg), z_local
                 )
-                # A device's span covers only the block-rows its tiles
-                # visit; the Pallas output is undefined memory elsewhere
-                # (per-span coverage dummies would cost n_row_blocks * cap
-                # slots per span per segment).  Zero the unvisited strips
-                # before the psum.  Span-padding tiles repeat the last
-                # real tile's coordinates (see ``prepare``) — already
-                # visited rows — so masking to the visited set is exact;
-                # an all-pad span zero-defines block-row 0 and contributes
-                # nothing.  The jnp reference needs none of this
-                # (segment_sum zero-defines every row).
-                nb = s.padded_shape[0] // s.tile
-                visited = jnp.zeros((nb,), bool).at[s.tile_row].set(True)
-                part = jnp.where(
-                    jnp.repeat(visited, s.tile)[:, None], part, 0.0
-                )
-            out = part if out is None else out + part
+                out = part if out is None else out + part
+        else:
+            # chain the per-bucket launches through one accumulator,
+            # starting from explicit zeros: a span covers only the rows
+            # its tiles visit, and the chain passes unvisited strips
+            # through — zero — so the output is defined everywhere
+            # without per-span coverage dummies or masking.
+            segs = tuple(_segment_local(s) for s in sp_local.segments)
+            local_plan = segs[0] if len(segs) == 1 else SCVBucketedPlan(segs)
+            out = scv_ops.scv_spmm_plan(
+                local_plan, z_local, feature_block=feature_block,
+                interpret=(backend == "pallas_interpret"
+                           or jax.default_backend() != "tpu"),
+                init="zeros",
+            )
+        if tp == 1:
+            return out  # no boundary rows to merge — skip the collective
         return jax.lax.psum(out, TILE_AXIS)  # the §V-G PS merge — once
 
     specs = jax.tree.map(lambda _: P(TILE_AXIS), sp)
@@ -328,8 +428,9 @@ def aggregate_sharded(
         out_specs=P(None, FEATURE_AXIS),  # psum leaves "tiles" replicated
         # pallas_call has no replication rule (jax 0.4.x): skip the static
         # check there — the psum above makes the output replicated either
-        # way; the jnp path keeps the check as a safety net
-        check_rep=(backend == "jnp"),
+        # way; the jnp path keeps the check as a safety net (not at
+        # tp == 1, where the psum is skipped and the axis is trivial)
+        check_rep=(backend == "jnp" and tp > 1),
     )
     return fn(sp, z)[: sp.shape[0], :f]
 
@@ -372,11 +473,14 @@ class PlanExecutor:
         )
         return Mesh(grid, (TILE_AXIS, FEATURE_AXIS))
 
-    def decide_for(self, nnz: int, n_features: int) -> ShardingDecision:
+    def decide_for(
+        self, nnz: int, n_features: int, n_rows: Optional[int] = None
+    ) -> ShardingDecision:
         """Decision from known workload numbers (the serving engine sums
         member adjacency nnz before any plan exists)."""
         return decide_sharding(
             nnz, n_features, self.n_devices,
+            n_rows=n_rows,
             min_nnz_per_part=self.min_nnz_per_part,
             min_features_per_part=self.min_features_per_part,
         )
@@ -387,7 +491,7 @@ class PlanExecutor:
         """Decision from a plan's (host-read) nnz + a feature width."""
         segs = getattr(plan, "segments", (plan,))
         nnz = int(sum(np.asarray(s.nnz_in_tile, np.int64).sum() for s in segs))
-        return self.decide_for(nnz, n_features)
+        return self.decide_for(nnz, n_features, n_rows=plan.shape[0])
 
     def prepare(
         self,

@@ -89,6 +89,10 @@ def shard_tiles(tiles: SCVTiles, part: Partition) -> SCVTiles:
     idx = np.where(pad, 0, idx)
 
     def take(a, fill=0):
+        if a.shape[0] == 0:
+            # coverage-free ladders can leave later buckets with zero
+            # tiles; every span slot is then part-padding
+            return np.full((len(idx),) + a.shape[1:], fill, a.dtype)
         out = a[idx].copy()
         out[pad] = fill
         return out
@@ -143,7 +147,12 @@ def shard_plan(
     def take(a, fill=0):
         if a is None:
             return None
-        out = jnp.asarray(a)[idx_j]
+        a = jnp.asarray(a)
+        if a.shape[0] == 0:
+            # zero-tile segment (empty bucket of a coverage-free ladder):
+            # nothing to gather, every span slot is part-padding
+            return jnp.full((idx_j.shape[0],) + a.shape[1:], fill, a.dtype)
+        out = a[idx_j]
         mask = pad_j.reshape((-1,) + (1,) * (out.ndim - 1))
         return jnp.where(mask, jnp.asarray(fill, out.dtype), out)
 

@@ -663,9 +663,11 @@ class SCVBucketedPlan:
     Each segment is an :class:`SCVPlan` holding the tiles whose nnz fits
     its (static) cap — so one hub tile no longer inflates the padded entry
     arrays of every other tile the way a single global cap does.  The
-    kernel runs one ``pallas_call`` per segment and the partial outputs
-    are summed; every segment carries its own coverage dummies because
-    each call must define the whole PS output it contributes.
+    kernel runs one ``pallas_call`` per segment, chained through a single
+    aliased accumulator (``ops.scv_spmm_plan``): the first launch
+    zero-defines the whole output (coverage dummies live in the first
+    segment only), later launches seed visited strips from the running
+    accumulator and pass unvisited strips through.
 
     Pytree contract: the segment tuple is the only child (each segment is
     itself a pytree whose aux carries its cap), so jit specializes on the
@@ -747,17 +749,24 @@ def plan_from_tiles_bucketed(
     """SCVTiles (host) -> nnz-bucketed device plan.
 
     ``caps`` defaults to :func:`bucket_caps_for` over the tile nnz
-    histogram.  Every segment gets its own coverage dummies (landing in
-    the bucket its zero nnz selects — the smallest cap), so each of the
-    per-bucket kernel launches defines the full output it contributes.
+    histogram.  Coverage dummies are emitted **once per plan**, in the
+    first segment only (where zero nnz buckets them anyway — the smallest
+    cap): the first kernel launch zero-defines the whole output and every
+    later launch chains through it in accumulate mode
+    (``ops.scv_spmm_plan``), so higher-cap segments never pay
+    ``n_row_blocks * cap`` dummy slots again.
     """
     if caps is None:
         caps = bucket_caps_for(t.nnz_in_tile, t.tile)
     segs = bucket_tiles(t, caps)
     return SCVBucketedPlan(
         tuple(
-            plan_from_tiles(s, ensure_coverage=ensure_coverage, with_perm=with_perm)
-            for s in segs
+            plan_from_tiles(
+                s,
+                ensure_coverage=(ensure_coverage and j == 0),
+                with_perm=with_perm,
+            )
+            for j, s in enumerate(segs)
         )
     )
 

@@ -579,7 +579,13 @@ def validate_plan(
         for j, seg in enumerate(obj.segments):
             v = _PlanView.of(seg)
             views.append((v, {"segment": j}))
-            checks += _validate_single(v, {"segment": j})
+            # coverage-free chaining: only the FIRST segment's launch
+            # zero-defines the output, so only it owes full coverage —
+            # later segments chain through the accumulator and may visit
+            # any subset of block-rows (contiguity still required)
+            checks += _validate_single(
+                v, {"segment": j}, require_full_coverage=(j == 0)
+            )
         checks += _check_ladder(obj)
         checks += _check_perm_bijection(views, {})
         if coo is not None:
@@ -633,19 +639,21 @@ def _validate_sharded(sp, coo: Optional[COOMatrix]) -> ValidationReport:
             covered.setdefault(j, set()).update(
                 int(r) for r in np.unique(v.tile_row)
             )
-    # spans of one segment must jointly cover every block-row (each
-    # per-bucket launch defines the strips it visits; the psum merges them
-    # but an entirely-unvisited row would stay at the pre-mask zero only
-    # because aggregate_sharded masks — the *plan* contract is coverage)
-    for j, seg in enumerate(sp.segments):
-        rows = covered.get(j, set())
-        nb = seg.padded_shape[0] // seg.tile
+    # the spans of the FIRST segment must jointly cover every block-row:
+    # coverage dummies live only there (coverage-free chaining), and the
+    # sharded launch chains each device's segments from an explicit zero
+    # accumulator — so later segments may visit any subset of rows, but
+    # the plan-level contract stays "segment 0 defines the whole output"
+    if sp.segments:
+        rows = covered.get(0, set())
+        seg0 = sp.segments[0]
+        nb = seg0.padded_shape[0] // seg0.tile
         missing = sorted(set(range(nb)) - rows)
         checks.append(
             InvariantResult(
                 "shard-coverage",
                 not missing,
-                segment=j,
+                segment=0,
                 offending=tuple(missing),
                 detail=(
                     f"{len(missing)} block-row(s) unvisited by every span"

@@ -112,9 +112,9 @@ def _spmm_fwd(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z,
     return out, (tile_row, tile_col, nnz_in_tile, rows, cols, vals, z)
 
 
-def _spmm_bwd(tile, n_rows, feature_block, interpret, body, chunk,
-              dense_threshold, res, g):
-    tile_row, tile_col, nnz_in_tile, rows, cols, vals, z = res
+def _entry_grads(tile, tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, g):
+    """(dvals, dz) for one launch — shared by the plain and the
+    accumulate-mode VJPs (the acc contribution is identity: d/dacc = g)."""
     grows = (tile_row[:, None] * tile + rows).reshape(-1)
     gcols = (tile_col[:, None] * tile + cols).reshape(-1)
     gf = g.astype(jnp.float32)
@@ -127,19 +127,69 @@ def _spmm_bwd(tile, n_rows, feature_block, interpret, body, chunk,
     # d/dZ = A^T g : scatter-add g rows into z rows, weighted
     dz = jnp.zeros(z.shape, jnp.float32)
     dz = dz.at[gcols].add(gf[grows] * vals.reshape(-1)[:, None].astype(jnp.float32))
+    return dvals, dz.astype(z.dtype)
 
-    def f0(a):  # integer-typed primals take float0 cotangents
-        # jax requires float0 cotangents as *numpy* arrays (jnp.zeros
-        # cannot hold dtype float0) — deliberate host-side constant.
-        return np.zeros(a.shape, jax.dtypes.float0)  # scvlint: ignore[SCV001]
 
+def _f0(a):  # integer-typed primals take float0 cotangents
+    # jax requires float0 cotangents as *numpy* arrays (jnp.zeros
+    # cannot hold dtype float0) — deliberate host-side constant.
+    return np.zeros(a.shape, jax.dtypes.float0)  # scvlint: ignore[SCV001]
+
+
+def _spmm_bwd(tile, n_rows, feature_block, interpret, body, chunk,
+              dense_threshold, res, g):
+    tile_row, tile_col, nnz_in_tile, rows, cols, vals, z = res
+    dvals, dz = _entry_grads(
+        tile, tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, g
+    )
     return (
-        f0(tile_row), f0(tile_col), f0(nnz_in_tile), f0(rows), f0(cols),
-        dvals, dz.astype(z.dtype),
+        _f0(tile_row), _f0(tile_col), _f0(nnz_in_tile), _f0(rows), _f0(cols),
+        dvals, dz,
     )
 
 
 _spmm.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+# Accumulate-mode launch: out = acc + Â Z with the accumulator aliased onto
+# the output buffer.  ``acc`` is a *differentiable* operand — the chain
+# out_k = out_{k-1} + contrib_k backpropagates by plain composition, each
+# link passing the cotangent through to its predecessor unchanged.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11, 12, 13, 14))
+def _spmm_acc(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, acc,
+              tile, n_rows, feature_block, interpret, body, chunk,
+              dense_threshold):
+    return scv_spmm_pallas(
+        tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, acc,
+        tile=tile, n_rows=n_rows, feature_block=feature_block,
+        interpret=interpret, body=body, chunk=chunk,
+        dense_threshold=dense_threshold,
+    )
+
+
+def _spmm_acc_fwd(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, acc,
+                  tile, n_rows, feature_block, interpret, body, chunk,
+                  dense_threshold):
+    out = _spmm_acc(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, acc,
+                    tile, n_rows, feature_block, interpret, body, chunk,
+                    dense_threshold)
+    return out, (tile_row, tile_col, nnz_in_tile, rows, cols, vals, z)
+
+
+def _spmm_acc_bwd(tile, n_rows, feature_block, interpret, body, chunk,
+                  dense_threshold, res, g):
+    tile_row, tile_col, nnz_in_tile, rows, cols, vals, z = res
+    dvals, dz = _entry_grads(
+        tile, tile_row, tile_col, nnz_in_tile, rows, cols, vals, z, g
+    )
+    # out = acc + contribution, identically in every row: d/dacc = g
+    return (
+        _f0(tile_row), _f0(tile_col), _f0(nnz_in_tile), _f0(rows), _f0(cols),
+        dvals, dz, g,
+    )
+
+
+_spmm_acc.defvjp(_spmm_acc_fwd, _spmm_acc_bwd)
 
 
 def scv_spmm(
@@ -200,6 +250,7 @@ def scv_spmm_plan(
     body: str = "vector",
     chunk: int | None = None,
     dense_threshold: int | None = None,
+    init: str = "coverage",
 ) -> jnp.ndarray:
     """``scv_spmm`` over a ``core.scv`` plan pytree (``SCVPlan`` or the
     nnz-bucketed ``SCVBucketedPlan``).
@@ -208,32 +259,60 @@ def scv_spmm_plan(
     capacity via the leaf shapes, the bucket ladder via the segment tuple)
     comes from the plan's aux data — nothing needs to be threaded alongside
     the arrays, so callers stay jit-able.  A bucketed plan runs one kernel
-    launch per capacity segment; each launch covers every PS block-row
-    (per-segment coverage dummies), so the partial outputs are defined
-    everywhere and sum to the full aggregation.  Z is padded **once** for
-    all segments (same tile, same feature_block — per-launch re-padding
-    would be redundant work in eager mode).
+    launch per capacity segment, **chained through one accumulator**: the
+    first launch zero-initializes its strips (its coverage dummies define
+    the whole output — ``plan_from_tiles_bucketed`` emits them in the
+    first segment only), and every later launch runs in accumulate mode
+    (``input_output_aliases``) — visited strips are seeded from the
+    previous launch's output, unvisited strips pass through.  Coverage
+    dummies therefore exist once per *plan*, not once per segment at that
+    segment's cap, and there is no partial-output sum tree.  Z is padded
+    **once** for all segments (same tile, same feature_block — per-launch
+    re-padding would be redundant work in eager mode).
+
+    ``init="zeros"`` starts the chain from an explicit zero accumulator
+    instead: every row is then defined even when *no* segment covers it —
+    the executor's sharded spans (which carry no per-span coverage) use
+    this mode.
 
     Under the executor's feature-axis sharding (``core.exec``), ``z`` is a
     device-local ``Z[:, f0:f1]`` slab: the kernel's feature-block grid
     axis then simply runs over fewer blocks — the mesh mapping happens at
     the ``shard_map`` layer, the kernel is unchanged.
     """
+    from repro.core.scv import DEFAULT_CHUNK
+
+    if init not in ("coverage", "zeros"):
+        raise ValueError(f"init must be 'coverage' or 'zeros', got {init!r}")
     # a bare SCVPlan is a 1-tuple; SCVBucketedPlan guarantees >= 1 segment
     segments = getattr(plan, "segments", (plan,))
     f_orig = z.shape[1]
     fb = _feature_block_for(f_orig, feature_block)
     zp = _pad_z(z, segments[0].tile, fb)
+    n_rows = segments[0].padded_shape[0]
+    chunk = int(DEFAULT_CHUNK if chunk is None else chunk)
     out = None
+    if init == "zeros":
+        out = jnp.zeros((n_rows, zp.shape[1]), jnp.float32)
     for seg in segments:
-        part = scv_spmm(
-            seg.tile_row, seg.tile_col, seg.rows, seg.cols, seg.vals, zp,
-            tile=seg.tile, n_rows=seg.padded_shape[0],
-            nnz_in_tile=seg.nnz_in_tile,
-            feature_block=fb, interpret=interpret,
-            body=body, chunk=chunk, dense_threshold=dense_threshold,
+        args = (
+            seg.tile_row.astype(jnp.int32),
+            seg.tile_col.astype(jnp.int32),
+            seg.nnz_in_tile.astype(jnp.int32),
+            seg.rows.astype(jnp.int32),
+            seg.cols.astype(jnp.int32),
+            seg.vals,
+            zp,
         )
-        out = part if out is None else out + part
+        statics = (seg.tile, n_rows, fb, interpret, body, chunk, dense_threshold)
+        if seg.tile_row.shape[0] == 0:  # empty segment: nothing to launch
+            if out is None:
+                out = jnp.zeros((n_rows, zp.shape[1]), jnp.float32)
+            continue
+        if out is None:
+            out = _spmm(*args, *statics)
+        else:
+            out = _spmm_acc(*args, out, *statics)
     return out[:, :f_orig]
 
 

@@ -64,8 +64,9 @@ def _kernel_scalar(
     cols_ref,  # i32[1, cap]   (SMEM) local col of each entry
     vals_ref,  # f32[1, cap]   (SMEM) value of each entry
     z_ref,  # [T, Fb]       (VMEM) combined-feature block
-    out_ref,  # f32[T, Fb]    (VMEM) PS strip block
+    *refs,  # (out_ref,) or (acc_ref, out_ref) in accumulate mode
 ):
+    acc_ref, out_ref = refs if len(refs) == 2 else (None, refs[0])
     t = pl.program_id(1)
 
     # Fresh PS strip?  (first tile overall, or block-row changed.)
@@ -74,7 +75,13 @@ def _kernel_scalar(
 
     @pl.when(new_strip)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        # accumulate mode: seed the strip from the chained accumulator
+        # (the prior launch's output, aliased into this launch's buffer)
+        # instead of zero — unvisited strips pass through untouched.
+        if acc_ref is None:
+            out_ref[...] = jnp.zeros_like(out_ref)
+        else:
+            out_ref[...] = acc_ref[...]
 
     nnz = nnz_ref[t]
 
@@ -99,12 +106,12 @@ def _kernel_vector(
     cols_ref,  # i32[1, cap]   (VMEM) local col of each entry
     vals_ref,  # f32[1, cap]   (VMEM) value of each entry
     z_ref,  # [T, Fb]       (VMEM) combined-feature block
-    out_ref,  # f32[T, Fb]    (VMEM) PS strip block
-    *,
+    *refs,  # (out_ref,) or (acc_ref, out_ref) in accumulate mode
     tile: int,
     chunk: int,
     dense_threshold: int,
 ):
+    acc_ref, out_ref = refs if len(refs) == 2 else (None, refs[0])
     T, C = tile, chunk
     t = pl.program_id(1)
 
@@ -113,7 +120,10 @@ def _kernel_vector(
 
     @pl.when(new_strip)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        if acc_ref is None:
+            out_ref[...] = jnp.zeros_like(out_ref)
+        else:
+            out_ref[...] = acc_ref[...]
 
     nnz = nnz_ref[t]
     n_chunks = (nnz + C - 1) // C
@@ -192,6 +202,7 @@ def scv_spmm_pallas(
     cols: jnp.ndarray,  # i32[nt, cap]
     vals: jnp.ndarray,  # f32[nt, cap]
     z: jnp.ndarray,  # [n_cols_padded, F_padded] — multiples of (tile, feature_block)
+    acc: jnp.ndarray | None = None,  # f32[n_rows, F_padded] chained accumulator
     *,
     tile: int,
     n_rows: int,  # padded to a multiple of tile
@@ -201,6 +212,15 @@ def scv_spmm_pallas(
     chunk: int = DEFAULT_CHUNK,
     dense_threshold: int | None = None,
 ) -> jnp.ndarray:
+    """One SCV SpMM launch.
+
+    With ``acc`` (accumulate mode) the launch computes ``acc + Â Z``
+    instead of ``Â Z``: the accumulator is aliased onto the output buffer
+    (``input_output_aliases``), visited PS strips are *seeded* from it on
+    first visit, and unvisited strips pass through untouched — so a chain
+    of launches (one per capacity bucket) needs coverage dummies only in
+    its first link (DESIGN.md §2).
+    """
     nt, cap = vals.shape
     n_cols_p, f_p = z.shape
     T, Fb = tile, feature_block
@@ -235,23 +255,36 @@ def scv_spmm_pallas(
 
     grid = (f_p // Fb, nt)  # feature blocks outer, tiles inner
 
+    in_specs = [
+        # entry coordinate/value arrays: one tile's slice per step
+        pl.BlockSpec(
+            (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=entry_space
+        ),
+        pl.BlockSpec(
+            (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=entry_space
+        ),
+        pl.BlockSpec(
+            (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=entry_space
+        ),
+        # Z block steered by the prefetched tile column
+        pl.BlockSpec((T, Fb), lambda f, t, tr, tc, nz: (tc[t], f)),
+    ]
+    operands = (tile_row, tile_col, nnz_in_tile, rows, cols, vals, z)
+    aliases = {}
+    if acc is not None:
+        assert acc.shape == (n_rows, f_p), (acc.shape, n_rows, f_p)
+        # the accumulator rides the same index map as the output: the
+        # kernel seeds each strip from its acc block on first visit, and
+        # the buffer alias (acc is input 7 counting the scalar-prefetch
+        # operands) makes unvisited strips retain the accumulator bytes
+        in_specs.append(pl.BlockSpec((T, Fb), lambda f, t, tr, tc, nz: (tr[t], f)))
+        operands += (acc.astype(jnp.float32),)
+        aliases = {7: 0}
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
-        in_specs=[
-            # entry coordinate/value arrays: one tile's slice per step
-            pl.BlockSpec(
-                (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=entry_space
-            ),
-            pl.BlockSpec(
-                (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=entry_space
-            ),
-            pl.BlockSpec(
-                (1, cap), lambda f, t, tr, tc, nz: (t, 0), memory_space=entry_space
-            ),
-            # Z block steered by the prefetched tile column
-            pl.BlockSpec((T, Fb), lambda f, t, tr, tc, nz: (tc[t], f)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((T, Fb), lambda f, t, tr, tc, nz: (tr[t], f)),
     )
 
@@ -259,5 +292,6 @@ def scv_spmm_pallas(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_rows, f_p), jnp.float32),
+        input_output_aliases=aliases,
         interpret=interpret,
-    )(tile_row, tile_col, nnz_in_tile, rows, cols, vals, z)
+    )(*operands)

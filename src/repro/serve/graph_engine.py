@@ -102,13 +102,17 @@ class GraphEngineConfig:
     # nnz-bucketed plans: a fixed ascending capacity ladder shared by every
     # member plan (so composites fuse segment-by-segment and jit traces are
     # shared across batches).  ON by default — the serve_bench A/B
-    # (BENCH_serve.json) gates bucketed >= single-cap throughput; the 3-deep
-    # ladder measured fastest there (a 4th bucket adds a launch + a full
-    # set of per-segment coverage dummies at its cap for little padding
-    # gain).  Empty tuple selects the legacy single-cap plans (``cap``);
-    # when the ladder is set it supersedes ``cap`` (heavy tiles chain-split
-    # at ``bucket_caps[-1]``).
-    bucket_caps: tuple[int, ...] = (8, 32, 128)
+    # (BENCH_serve.json) gates bucketed >= single-cap throughput AND the
+    # default ladder >= the measured ladder-depth winner.  With
+    # accumulator-chained launches coverage dummies exist once per plan,
+    # so ladder depth no longer pays a per-segment dummy set — the
+    # remaining depth cost is one launch (one jnp pass on the serving
+    # backend) per extra bucket, and the 2-deep ladder measured fastest
+    # on the sparse serving pool (ladder_ab in BENCH_serve.json; 3/4-deep
+    # within ~5%).  Empty tuple selects the legacy single-cap plans
+    # (``cap``); when the ladder is set it supersedes ``cap`` (heavy
+    # tiles chain-split at ``bucket_caps[-1]``).
+    bucket_caps: tuple[int, ...] = (8, 32)
     node_buckets: tuple[int, ...] = (256, 512, 1024, 2048, 4096)
     cache_entries: int = 256
     cache_bytes: int = 256 << 20
@@ -122,6 +126,12 @@ class GraphEngineConfig:
     # engine even when an executor is attached.
     shard_nodes_threshold: Optional[int] = None
     shard_nnz_threshold: Optional[int] = None
+    # periodic re-anchoring of delta-tracked graphs: every N updates the
+    # tracked entry is re-homed from its delta-chained lineage key to the
+    # coo_content_key of the *current* adjacency (PlanCache.anchor), so an
+    # untracked client submitting the same post-delta graph hits instead
+    # of building a duplicate entry.  0 disables.
+    anchor_every: int = 16
     # debug mode: run the full core.validate invariant chain on every
     # freshly *built* composite (cache hits were validated when built).
     # A malformed composite then fails loudly at the admission boundary
@@ -144,6 +154,8 @@ class GraphEngineConfig:
             v = getattr(self, field)
             if v is not None and v <= 0:
                 raise ValueError(f"{field} must be positive (or None)")
+        if self.anchor_every < 0:
+            raise ValueError("anchor_every must be >= 0 (0 disables)")
         if self.completed_history < 0:
             raise ValueError("completed_history must be >= 0")
         if self.node_buckets and self.max_batch_nodes > max(self.node_buckets):
@@ -190,17 +202,19 @@ def _assemble_segment(
     cap: int,
     order: str,
     entry_off: Optional[np.ndarray],
+    first_segment: bool = True,
 ) -> SCVPlan:
     """Fuse one capacity segment across members into the composite segment.
 
     Member tile coordinates shift by the member's block offset; then two
     pad blocks follow: fresh zero-nnz coverage tiles for the bucket-padding
-    block-rows at the tail (the Pallas kernel zero-defines a PS strip only
-    when it visits its row — and *every* segment is its own kernel launch,
-    so every segment needs the tail covered), then tile-count padding up
-    to the next power of two so jit sees a bounded set of array shapes.
-    The tile-count padding repeats the *last* tile's coordinates: the
-    kernel then revisits an already-initialized PS strip (no re-zeroing —
+    block-rows at the tail — only in the *first* segment (its launch
+    zero-defines the whole output; later launches chain through the
+    aliased accumulator, so member plans and composites alike carry
+    coverage once per plan) — then tile-count padding up to the next
+    power of two so jit sees a bounded set of array shapes.  The
+    tile-count padding repeats the *last* tile's coordinates: the kernel
+    then revisits an already-initialized PS strip (no re-zeroing —
     appending a fresh block-row would wipe real output), and the jnp
     reference masks the zero-nnz slots via nnz_in_tile.
 
@@ -211,7 +225,8 @@ def _assemble_segment(
     k = len(segs)
     nts = np.array([s.n_tiles for s in segs], np.int64)
     nt_members = int(nts.sum())
-    n_cov = pad_nodes // T - n_aligned // T  # fresh tail coverage tiles
+    # fresh tail coverage tiles (first segment only)
+    n_cov = pad_nodes // T - n_aligned // T if first_segment else 0
     nt = nt_members + n_cov
     nt_bucket = 8
     while nt_bucket < nt:
@@ -220,11 +235,8 @@ def _assemble_segment(
     n_fill = nt_bucket - nt if nt else 0
 
     shift = np.repeat(blk_off[:k], nts)  # per-tile block-diagonal offset
-    tile_row = _cat(
-        [s.tile_row for s in segs],
-        [np.arange(n_aligned // T, pad_nodes // T, dtype=np.int64)],
-        np.int64,
-    )
+    cov_rows = np.arange(n_aligned // T, pad_nodes // T, dtype=np.int64)[:n_cov]
+    tile_row = _cat([s.tile_row for s in segs], [cov_rows], np.int64)
     tile_row[:nt_members] += shift
     tile_col = _cat(
         [s.tile_col for s in segs], [np.zeros(n_cov, np.int64)], np.int64
@@ -355,6 +367,7 @@ def assemble_batched_graph(
         _assemble_segment(
             [member_segments(g)[j] for g in plans],
             blk_off, n_aligned, pad_nodes, T, cap, order, entry_off,
+            first_segment=(j == 0),
         )
         for j, cap in enumerate(ladder)
     ]
@@ -381,6 +394,7 @@ class _TrackedGraph:
 
     adj: COOMatrix
     key: str
+    updates_since_anchor: int = 0  # see GraphEngineConfig.anchor_every
 
 
 class GraphServeEngine:
@@ -509,6 +523,18 @@ class GraphServeEngine:
             st.key, delta, patch=lambda g: apply_delta(g, delta, check=False)
         )
         self.n_graph_updates += 1
+        st.updates_since_anchor += 1
+        if (
+            self.cfg.anchor_every
+            and st.updates_since_anchor >= self.cfg.anchor_every
+        ):
+            # re-home the lineage key to the current adjacency's content
+            # key: bounds drift between tracked and content-addressed
+            # clients (see PlanCache.anchor)
+            st.key = self.plan_cache.anchor(
+                st.key, self._member_content_key(st.adj)
+            )
+            st.updates_since_anchor = 0
         return st.key
 
     def tracked_adj(self, graph_id: str) -> COOMatrix:
@@ -577,7 +603,7 @@ class GraphServeEngine:
             return None
         # the narrowest width any layer aggregates bounds useful Z-sharding
         n_feat = min(mcfg.d_in, mcfg.d_hidden, mcfg.n_classes)
-        decision = self.executor.decide_for(nnz, n_feat)
+        decision = self.executor.decide_for(nnz, n_feat, n_rows=bucket)
         return None if decision.kind == "replicated" else decision
 
     def _batch_plan(self, batch: list[GraphRequest]) -> BatchedGraph:
@@ -725,6 +751,7 @@ class GraphServeEngine:
             "plan_cache_evictions": s.evictions,
             "plan_cache_expired": s.expired,
             "plan_cache_revalidated": s.revalidated,
+            "plan_cache_anchored": s.anchored,
             "graph_updates": self.n_graph_updates,
             "tracked_graphs": len(self._graphs),
             "plan_cache_bytes": s.bytes_in_use,

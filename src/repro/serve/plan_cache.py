@@ -146,6 +146,7 @@ class PlanCacheStats:
     evictions: int = 0
     expired: int = 0  # TTL drops (also counted as misses on lookup)
     revalidated: int = 0  # delta-patched entries re-keyed in place
+    anchored: int = 0  # delta-chained keys re-homed to content keys
     bytes_in_use: int = 0
     entries: int = 0
     build_seconds: float = 0.0
@@ -307,6 +308,28 @@ class PlanCache:
         self.put(new_key, patch(e.value))
         self.stats.revalidated += 1
         return new_key
+
+    def anchor(self, key: str, content_key: str) -> str:
+        """Re-home a live entry from a delta-chained key to the content
+        key of its *current* adjacency.
+
+        ``revalidate`` chains digests (``delta_key``), so a long-lived
+        tracked graph drifts away from ``coo_content_key`` of its actual
+        adjacency — an untracked client submitting the identical graph
+        would miss and build a duplicate entry.  Periodically re-homing
+        the entry under the content key re-joins the two key spaces and
+        bounds the drift window.  Counted in ``stats.anchored``; if the
+        entry is dead (evicted/expired) the content key is still returned
+        so the caller re-keys and the next build lands content-addressed.
+        """
+        e = self._live_entry(key)
+        if e is None or content_key == key:
+            return content_key
+        self._entries.pop(key)
+        self.stats.bytes_in_use -= e.nbytes
+        self.put(content_key, e.value, e.nbytes)
+        self.stats.anchored += 1
+        return content_key
 
     def _evict(self) -> None:
         while self._entries and (

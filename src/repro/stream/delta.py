@@ -603,7 +603,13 @@ def _apply_tiles(
             rows, cols, vals = t.rows, t.cols, t.vals
             nz, perm = t.nnz_in_tile, t.perm
         else:
-            tr, tc = t.tile_row.copy(), t.tile_col.copy()
+            # functional: copy only the leaves the patch writes;
+            # tile_row / tile_col are layout — unchanged here — and stay
+            # shared by identity (same contract as untouched bucketed
+            # segments).  Callers that hold aliases still see immutable
+            # history; callers that own their tiles should pass
+            # ``inplace=True`` — the zero-copy hot path.
+            tr, tc = t.tile_row, t.tile_col
             rows, cols, vals = t.rows.copy(), t.cols.copy(), t.vals.copy()
             nz, perm = t.nnz_in_tile.copy(), t.perm.copy()
         rows[aff_idx] = new.rows
@@ -915,7 +921,11 @@ def _apply_bucketed(
         nz[pos_n] = newc.nnz[sel]
         perm[pos_n] = newc.perm[sel][:, :cap_b]
 
-        missing = _coverage_tail(tile_row, nbr)
+        # coverage-free chaining: only segment 0 owes a coverage-dummy
+        # tail (the builder emits coverage once per plan; later segments
+        # chain through the aliased accumulator)
+        missing = _coverage_tail(tile_row, nbr) if b == 0 \
+            else np.zeros(0, np.int64)
         kd = len(missing)
         out_segments.append(
             dataclasses.replace(
@@ -994,9 +1004,12 @@ def apply_delta(
     ``inplace=True`` (SCVTiles only) mutates the arrays when the chunk
     layout is unchanged — the zero-allocation hot path for streams of
     slack-absorbed updates; a layout change (tile birth/death, chain
-    growth) still returns a fresh object.  Plan layers always return new
-    pytrees but reuse untouched device leaves (bucketed segments the
-    delta never touches keep their arrays by identity).
+    growth) still returns a fresh object.  The functional default copies
+    only the leaves the patch writes (layout leaves are shared by
+    identity) — use it when other references to the tiles must keep
+    seeing pre-delta bytes.  Plan layers always return new pytrees but
+    reuse untouched device leaves (bucketed segments the delta never
+    touches keep their arrays by identity).
 
     ``source`` (optional, anything with ``.rows`` / ``.cols`` — e.g. the
     pre-delta ``COOMatrix``) lets a net-shrinking delta locate the moved

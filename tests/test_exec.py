@@ -34,8 +34,10 @@ from repro.simul.datasets import gcn_normalize, powerlaw_graph
 # decision rule
 # ---------------------------------------------------------------------------
 def test_decide_sharding_axes():
-    # plenty of nnz: all devices go to the tile axis
-    assert decide_sharding(10**6, 256, 8) == ShardingDecision("tiles", 8, 1)
+    # plenty of nnz AND a 2-way-splittable feature width: the byte model
+    # balances both axes (t4f2 moves fewer bytes/device than t8f1 — the
+    # allreduce term grows with tp while the gather term shrinks)
+    assert decide_sharding(10**6, 256, 8) == ShardingDecision("2d", 4, 2)
     # tiny graph, wide features: all devices to the feature axis
     assert decide_sharding(100, 1024, 8) == ShardingDecision("features", 1, 8)
     # both floors bind partway: 2-D
@@ -47,6 +49,28 @@ def test_decide_sharding_axes():
     # nothing to shard
     assert decide_sharding(10, 4, 8).kind == "replicated"
     assert decide_sharding(10**6, 256, 1).kind == "replicated"
+    # a known row count sharpens the model: dense-ish graphs (high avg
+    # degree -> small out slab) tilt back toward pure tile spans
+    dense = decide_sharding(10**6, 256, 8, n_rows=2_000)
+    assert dense.tile_parts > decide_sharding(10**6, 256, 8).tile_parts // 2
+
+
+def test_placement_bytes_model():
+    from repro.core.exec import placement_bytes
+
+    pb = placement_bytes(10**6, 256, 4, 2, n_rows=125_000)
+    # components add up, and the psum term vanishes at tp == 1
+    assert pb["total"] == pb["plan"] + pb["z_gather"] + pb["out"] + pb[
+        "collective"
+    ]
+    assert pb["resident"] == pb["plan"] + pb["z_slab"] + pb["out"]
+    assert placement_bytes(10**6, 256, 1, 2)["collective"] == 0
+    # the tile axis divides plan + gather; the feature axis divides slabs
+    half = placement_bytes(10**6, 256, 8, 2, n_rows=125_000)
+    assert half["plan"] == pb["plan"] / 2 and half["z_gather"] == pb[
+        "z_gather"
+    ] / 2
+    assert half["out"] == pb["out"]
 
 
 def test_decision_validation():

@@ -587,6 +587,59 @@ def test_engine_update_between_submit_and_run(rng):
     np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
 
 
+def test_engine_periodic_reanchor_rejoins_content_keys(rng):
+    # after anchor_every updates the tracked key must re-home to the
+    # coo_content_key of the current adjacency, so an untracked client
+    # submitting the identical post-delta graph hits the same entry
+    adj = _graphs([50], seed=47)[0]
+    x = rng.standard_normal((50, 8)).astype(np.float32)
+    eng, params, cfg = _engine(anchor_every=3)
+    eng.submit(GraphRequest(rid=0, adj=adj, x=x, model="gcn", graph_id="g0"))
+    eng.run()
+
+    cur = adj
+    for i in range(3):
+        d = _value_update(cur, [i, i + 1], 2.0 + i)
+        key = eng.update("g0", d)
+        from repro.stream import apply_coo
+
+        cur = apply_coo(cur, d)
+    # third update crossed the anchor threshold: key == content key now
+    assert key == eng._member_content_key(cur)
+    m = eng.metrics()
+    assert m["plan_cache_anchored"] == 1
+    # anchored updates still count as revalidations (the Phase B gate)
+    assert m["plan_cache_revalidated"] == 3 == m["graph_updates"]
+    # the anchored entry is live under the content key: an untracked
+    # submit of the same adjacency resolves without a member rebuild
+    misses_before = m["plan_cache_misses"]
+    eng.submit(GraphRequest(rid=1, adj=cur, x=x, model="gcn"))
+    out = eng.run()[0].out
+    # one composite miss is expected (new batch), but no member miss
+    assert eng.metrics()["plan_cache_misses"] == misses_before + 1
+    bucket_caps = tuple(eng.cfg.bucket_caps) or None
+    ref = np.asarray(gnn_forward(
+        params, cfg,
+        build_graph(cur, tile=64,
+                    backend_cap=None if bucket_caps else eng.cfg.cap,
+                    bucket_caps=bucket_caps),
+        jnp.asarray(x),
+    ))
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_engine_anchor_disabled_keeps_lineage_keys(rng):
+    adj = _graphs([50], seed=48)[0]
+    x = rng.standard_normal((50, 8)).astype(np.float32)
+    eng, _, _ = _engine(anchor_every=0)
+    eng.submit(GraphRequest(rid=0, adj=adj, x=x, model="gcn", graph_id="g0"))
+    eng.run()
+    for i in range(4):
+        key = eng.update("g0", _value_update(eng.tracked_adj("g0"), [i], 1.5))
+    assert eng.metrics()["plan_cache_anchored"] == 0
+    assert key != eng._member_content_key(eng.tracked_adj("g0"))
+
+
 def test_engine_update_invalidates_composite_batches(rng):
     # composite keys combine member keys, so a delta on one tracked member
     # re-keys every batch it rides in — co-batched outputs stay fresh
