@@ -1,0 +1,156 @@
+"""Autotuner benchmark: simulator-pruned plan search vs the hand-picked
+default config, on both serving regimes (DESIGN.md §8).
+
+The PR gate for the ``repro.tune`` subsystem: the two-stage search
+(analytic prune over the simul/ cost model, then short measured
+calibration of the survivors) must
+
+* never lose to the default ``TunedConfig`` — the default is always
+  measured in the same calibration loop as the survivors, and the winner
+  is measured-best, so tuned/default >= 1.0 holds **by construction**;
+  the gate asserts the machinery (default control present, timings
+  real),
+* beat the default **strictly** on at least one regime (the search has
+  to find something — if the hand-picked config were optimal everywhere
+  the subsystem would be dead weight),
+* hit the on-disk cache on re-tune: a fresh ``Autotuner`` sharing the
+  store must resolve both regimes with **zero** new searches, and
+* report the stage-1 predicted vs stage-2 measured Spearman rank
+  correlation — the number that says whether the analytic prune is
+  discarding the right candidates.
+
+Regimes: the 131k-node/1M-edge sparse graph of dist_bench and the
+2048-node/1M-edge dense graph of kernel_bench (Zipf 2.1 endpoints) — the
+two ends of the tile-occupancy spectrum the ladder exists for.
+
+Results land in ``BENCH_autotune.json`` (repo root) and as
+``name,us_per_call,derived`` CSV rows matching benchmarks/run.py.
+
+    PYTHONPATH=src python benchmarks/autotune_bench.py
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import tempfile
+import time
+
+from repro.core.scv import DEFAULT_LADDER, DEFAULT_TILE
+from repro.simul.datasets import powerlaw_graph
+from repro.tune import Autotuner, TuneStore
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+from kernel_bench import powerlaw_edges  # noqa: E402
+
+FEATURES = 32
+TOP_K = 2
+CALIB_REPS = 2
+#: tuned/default measured-speedup floor per regime.  >= 1.0 holds by
+#: construction (see module docstring); anything below means the default
+#: control went missing from the calibration set.
+MIN_SPEEDUP = 1.0
+#: at least one regime must beat the default by strictly more than this.
+STRICT_SPEEDUP = 1.0
+
+REGIMES = (
+    # (name, builder): opposite ends of the tile-occupancy spectrum
+    ("sparse_131k", lambda: powerlaw_graph(1 << 17, 1_000_000, seed=0)),
+    ("dense_2048", lambda: powerlaw_edges(2048, 1_000_000, seed=0)),
+)
+
+
+def _default_measured(result) -> float:
+    """Seconds of the always-measured default-config control run."""
+    for c in result.calibrated:
+        if (c.config.tile, c.config.bucket_caps) == (DEFAULT_TILE,
+                                                     DEFAULT_LADDER):
+            return c.measured_s
+    raise AssertionError("default control missing from calibration set")
+
+
+def main() -> int:
+    store_path = pathlib.Path(tempfile.mkdtemp(prefix="scv_tune_")) / "tune.json"
+    tuner = Autotuner(store=TuneStore(store_path), top_k=TOP_K,
+                      calib_reps=CALIB_REPS)
+
+    rows = []
+    print("name,us_per_call,derived")
+    for name, build in REGIMES:
+        adj = build()
+        t0 = time.perf_counter()
+        cfg = tuner.tune(adj, n_features=FEATURES)
+        search_s = time.perf_counter() - t0
+        res = tuner.last_result
+        tuned_s = min(c.measured_s for c in res.calibrated)
+        default_s = _default_measured(res)
+        speedup = default_s / tuned_s
+        rows.append({
+            "regime": name,
+            "nnz": int(adj.nnz),
+            "tuned": cfg.to_json(),
+            "tuned_seconds": tuned_s,
+            "default_seconds": default_s,
+            "speedup_vs_default": speedup,
+            "rank_correlation": res.rank_correlation,
+            "n_candidates": len(res.candidates),
+            "n_calibrated": len(res.calibrated),
+            "search_seconds": search_s,
+            "cache_key": res.key,
+        })
+        print(f"autotune_{name}_tuned,{tuned_s * 1e6:.0f},"
+              f"x{speedup:.2f} vs default; tile {cfg.tile} "
+              f"caps {list(cfg.bucket_caps) or [cfg.cap]}; "
+              f"rank-corr {res.rank_correlation:.2f}")
+        print(f"autotune_{name}_default,{default_s * 1e6:.0f},"
+              f"search {search_s:.1f}s over {len(res.candidates)} "
+              f"candidates ({len(res.calibrated)} measured)")
+
+    # cache-hit leg: a fresh tuner on the same store must re-resolve both
+    # regimes without searching (and without re-measuring anything)
+    t2 = Autotuner(store=TuneStore(store_path), top_k=TOP_K,
+                   calib_reps=CALIB_REPS)
+    t0 = time.perf_counter()
+    for (name, build), row in zip(REGIMES, rows):
+        assert t2.tune(build(), n_features=FEATURES).to_json() == row["tuned"]
+    hit_s = time.perf_counter() - t0
+    cache_ok = t2.searches == 0 and t2.cache_hits == len(REGIMES)
+    print(f"autotune_cache_hit,{hit_s / len(REGIMES) * 1e6:.0f},"
+          f"searches {t2.searches} hits {t2.cache_hits} (graph rebuild "
+          f"dominates; the search itself is skipped)")
+
+    payload = {
+        "features": FEATURES,
+        "top_k": TOP_K,
+        "calib_reps": CALIB_REPS,
+        "min_speedup_gate": MIN_SPEEDUP,
+        "strict_speedup_gate": STRICT_SPEEDUP,
+        "regimes": rows,
+        "cache_hit": {
+            "seconds_per_regime": hit_s / len(REGIMES),
+            "searches": t2.searches,
+            "cache_hits": t2.cache_hits,
+        },
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_autotune.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {out}")
+
+    ok = True
+    if not all(r["speedup_vs_default"] >= MIN_SPEEDUP for r in rows):
+        print("FAIL: tuned config lost to the default control",
+              file=sys.stderr)
+        ok = False
+    if not any(r["speedup_vs_default"] > STRICT_SPEEDUP for r in rows):
+        print("FAIL: search never strictly beat the default", file=sys.stderr)
+        ok = False
+    if not cache_ok:
+        print(f"FAIL: cache miss on re-tune (searches={t2.searches}, "
+              f"hits={t2.cache_hits})", file=sys.stderr)
+        ok = False
+    print("PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

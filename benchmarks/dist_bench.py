@@ -54,6 +54,7 @@ from repro.core.scv import (
     tile_nnz_histogram,
 )
 from repro.simul.datasets import powerlaw_graph
+from repro.tune import plan_launched_slots
 
 N_NODES = 1 << 17
 N_EDGES = 1_000_000
@@ -76,6 +77,13 @@ MAX_OVERHEAD = 6.0
 #: absolute gate holds the measured wall-time win on this host.
 FEATURES_OVERHEAD_GATE = 3.6
 FEATURES_SECONDS_GATE = 5.0
+#: Resident-bytes act/pred window.  The byte model prices *launched*
+#: capacity slots (``placement_bytes(..., n_slots=...)``), not logical
+#: nnz, so the old 1.11x (tiles) / 3.79x (features) optimism collapses
+#: to the residual slop of integer tile-boundary splits: observed
+#: ratios on this regime are ~1.008 (t8), 1.000 exactly (f8 — the plan
+#: is unsplit, so modeled slots == placed slots), ~1.019 (2d).
+VMEM_ACT_PRED_GATE = (0.95, 1.10)
 
 DECISIONS = (
     ShardingDecision("tiles", 8, 1),
@@ -129,12 +137,14 @@ def main() -> int:
         imb = sp.imbalance
         # VMEM model check: predicted per-device resident bytes (the
         # ShardingDecision cost model) vs the placed plan's actual
-        # leaves.  ``plan`` compares the modeled COO triple only — the
-        # actual number includes capacity-slot padding, so actual >=
-        # predicted and the ratio measures the model's optimism.
+        # leaves.  ``n_slots`` makes the model price launched capacity
+        # slots (chain splits, remainder buckets, coverage dummies) the
+        # way the built plan does, so act/pred must sit near 1.0; the
+        # residual is per-device rounding when a span split lands
+        # mid-bucket.
         pred = placement_bytes(
             int(adj.nnz), FEATURES, dec.tile_parts, dec.feature_parts,
-            n_rows=N_NODES,
+            n_rows=N_NODES, n_slots=plan_launched_slots(plan),
         )
         actual_plan = sum(
             seg.rows.nbytes + seg.cols.nbytes + seg.vals.nbytes
@@ -177,6 +187,7 @@ def main() -> int:
         "features_overhead_gate": FEATURES_OVERHEAD_GATE,
         "features_seconds_gate": FEATURES_SECONDS_GATE,
         "imbalance_gate": IMBALANCE_GATE,
+        "vmem_act_pred_gate": list(VMEM_ACT_PRED_GATE),
         "placements": rows,
     }
     out_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_dist.json"
@@ -189,6 +200,10 @@ def main() -> int:
     feat = next(r for r in rows if r["decision"].startswith("features"))
     ok = ok and feat["overhead_vs_single"] <= FEATURES_OVERHEAD_GATE
     ok = ok and feat["seconds"] <= FEATURES_SECONDS_GATE
+    lo, hi = VMEM_ACT_PRED_GATE
+    ok = ok and all(
+        lo <= r["vmem_actual_over_predicted"] <= hi for r in rows
+    )
     print("PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -268,6 +268,13 @@ def main() -> int:
             file=sys.stderr,
         )
         return 1
+    # The 0.5 floor (not 1.0) is an interpret-mode emulation artifact:
+    # each accumulate-mode grid step pays a real fetch+copy of the
+    # aliased accumulator block that compiled TPU double-buffers away,
+    # so the chain *loses* wall time here (x0.66-0.73 observed) while
+    # structurally removing HBM traffic.  The gate only catches
+    # regressions of the emulated ratio; the slot-count gate below is
+    # the real structural assertion.
     if chain_vs_persum < CHAIN_GATE:
         print(
             f"FAIL: coverage-free chain {chain_vs_persum:.2f}x < "

@@ -25,7 +25,11 @@
 #   * benchmarks/stream_bench.py (small-delta stream.apply_delta >= 10x a
 #     full coo_to_scv_tiles rebuild at 1M edges, byte-identical to the
 #     rebuild; engine updates land as plan-cache revalidations, never
-#     full misses; emits BENCH_stream.json).
+#     full misses; emits BENCH_stream.json),
+#   * benchmarks/autotune_bench.py (simulator-pruned config search never
+#     loses to the measured default control on either regime, strictly
+#     beats it on at least one, and re-resolves both from the on-disk
+#     cache with zero new searches; emits BENCH_autotune.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -39,3 +43,4 @@ python benchmarks/kernel_bench.py
 python benchmarks/dist_bench.py
 python benchmarks/serve_bench.py
 python benchmarks/stream_bench.py
+python benchmarks/autotune_bench.py

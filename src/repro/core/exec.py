@@ -128,6 +128,7 @@ def placement_bytes(
     *,
     n_rows: Optional[int] = None,
     machine=None,
+    n_slots: Optional[int] = None,
 ) -> dict:
     """Per-device byte model of a ``(tile_parts, feature_parts)`` placement.
 
@@ -161,6 +162,17 @@ def placement_bytes(
     out + collective — the cost :func:`decide_sharding` minimizes) and
     ``est_seconds`` (total bits over ``dram_gbps``).  ``n_rows`` defaults
     to ``nnz // EST_AVG_DEGREE`` when the caller only knows nnz.
+
+    ``n_slots`` — the plan's *launched* capacity slots (padding and
+    coverage dummies included; ``repro.tune.plan_launched_slots`` of a
+    built plan, or ``core.scv.launched_slots`` from a histogram).  When
+    given, the plan triple is priced at slots instead of logical nnz —
+    the shipped arrays really are slot-shaped, and BENCH_dist measured
+    the nnz-priced model 1.11-3.79x optimistic against placed plans.
+    This is the same pricing the autotuner's stage-1 model uses
+    (``repro.tune.cost``), so placement and plan tuning charge padding
+    identically.  Omitted, the legacy nnz pricing applies (callers that
+    predate any plan, e.g. the serving admission estimate).
     """
     if machine is None:
         from repro.simul.machine import MachineConfig
@@ -169,7 +181,12 @@ def placement_bytes(
     b = machine.bytes_per_elem
     rows = max(int(n_rows) if n_rows is not None else nnz // EST_AVG_DEGREE, 1)
     tp, fp = tile_parts, feature_parts
-    plan = 3 * nnz * b / tp
+    if n_slots is None:
+        plan = 3 * nnz * b / tp
+    else:
+        from repro.tune.cost import plan_slot_bytes
+
+        plan = plan_slot_bytes(n_slots, machine) / tp
     z_slab = rows * n_features * b / fp
     out = rows * n_features * b / fp
     z_gather = (nnz / tp) * (n_features / fp) * b
@@ -196,6 +213,7 @@ def decide_sharding(
     machine=None,
     min_nnz_per_part: int = MIN_NNZ_PER_PART,
     min_features_per_part: int = MIN_FEATURES_PER_PART,
+    n_slots: Optional[int] = None,
 ) -> ShardingDecision:
     """Pick tile-span, feature, or 2-D sharding by byte cost (DESIGN.md §5).
 
@@ -234,7 +252,8 @@ def decide_sharding(
             if tp * fp > n_devices:
                 continue
             cost = placement_bytes(
-                nnz, n_features, tp, fp, n_rows=n_rows, machine=machine
+                nnz, n_features, tp, fp,
+                n_rows=n_rows, machine=machine, n_slots=n_slots,
             )["total"]
             key = (cost, -tp, tp * fp)
             if best is None or key < best[0]:
@@ -474,24 +493,38 @@ class PlanExecutor:
         return Mesh(grid, (TILE_AXIS, FEATURE_AXIS))
 
     def decide_for(
-        self, nnz: int, n_features: int, n_rows: Optional[int] = None
+        self, nnz: int, n_features: int, n_rows: Optional[int] = None,
+        n_slots: Optional[int] = None,
     ) -> ShardingDecision:
         """Decision from known workload numbers (the serving engine sums
-        member adjacency nnz before any plan exists)."""
+        member adjacency nnz before any plan exists); ``n_slots`` prices
+        the plan triple at launched capacity slots when the caller knows
+        the plan layout."""
         return decide_sharding(
             nnz, n_features, self.n_devices,
             n_rows=n_rows,
             min_nnz_per_part=self.min_nnz_per_part,
             min_features_per_part=self.min_features_per_part,
+            n_slots=n_slots,
         )
 
     def decide(
         self, plan: Union[SCVPlan, SCVBucketedPlan], n_features: int
     ) -> ShardingDecision:
-        """Decision from a plan's (host-read) nnz + a feature width."""
+        """Decision from a plan's (host-read) nnz + a feature width.
+
+        With a built plan in hand the launched slot count is exact (static
+        aux only), so the byte model prices the real padded arrays — the
+        autotuner's pricing — rather than the logical-nnz lower bound.
+        """
+        from repro.tune.cost import plan_launched_slots
+
         segs = getattr(plan, "segments", (plan,))
         nnz = int(sum(np.asarray(s.nnz_in_tile, np.int64).sum() for s in segs))
-        return self.decide_for(nnz, n_features, n_rows=plan.shape[0])
+        return self.decide_for(
+            nnz, n_features, n_rows=plan.shape[0],
+            n_slots=plan_launched_slots(plan),
+        )
 
     def prepare(
         self,

@@ -65,6 +65,15 @@ BUCKET_RATIO = 4
 MAX_BUCKETS = 4
 #: Smallest per-tile entry capacity (TPU sublane count).
 MIN_BUCKET_CAP = 8
+#: Default tile size T (block row/column extent of an SCV tile).
+DEFAULT_TILE = 64
+#: Default single-bucket per-tile capacity when bucketing is disabled.
+DEFAULT_CAP = 64
+#: Default serving capacity ladder — the measured 2-deep A/B winner on the
+#: sparse 131k-node pool (serve_bench, PR 8).  Per-regime overrides come
+#: from ``repro.tune.TunedConfig``; scvlint SCV002 rejects re-declared
+#: tile/cap/ladder literals outside this module and ``tune/config.py``.
+DEFAULT_LADDER = (8, 32)
 
 
 def dense_tile_threshold(tile: int) -> int:
@@ -99,6 +108,44 @@ def bucket_caps_for(
     while len(caps) < max_buckets and caps[-1] // ratio >= MIN_BUCKET_CAP:
         caps.append(caps[-1] // ratio)
     return tuple(sorted(caps))
+
+
+def launched_slots(
+    counts: np.ndarray,
+    tile: int,
+    caps: tuple[int, ...],
+    n_row_blocks: int = 0,
+) -> int:
+    """Capacity slots a bucketed plan *launches* for a tile-nnz histogram.
+
+    Mirrors the ``coo_to_scv_tiles(cap=caps[-1])`` +
+    :func:`plan_from_tiles_bucketed` layout arithmetic without building the
+    plan: a logical tile with ``k`` entries chain-splits at the top cap —
+    ``k // caps[-1]`` full chunks occupy top-cap slot rows and the
+    remainder lands in the smallest cap holding it.  ``n_row_blocks``
+    (when given) adds one ``caps[0]`` slot row per output block row as the
+    first-segment coverage-dummy bound — an upper bound, since block rows
+    already covered by a first-segment tile need no dummy.
+
+    This is the number the byte model must price (``3 * slots * B`` for
+    the rows/cols/vals triple), not logical nnz: BENCH_dist measured the
+    nnz-priced model 1.11-3.79x optimistic against placed plans.
+    """
+    caps_arr = np.asarray(sorted(int(c) for c in caps), dtype=np.int64)
+    if caps_arr.size == 0:
+        raise ValueError("caps must be non-empty")
+    counts_arr = np.asarray(counts, dtype=np.int64)
+    counts_arr = counts_arr[counts_arr > 0]
+    top = int(caps_arr[-1])
+    slots = int(n_row_blocks) * int(caps_arr[0])
+    if counts_arr.size == 0:
+        return slots
+    slots += int((counts_arr // top).sum()) * top
+    rem = counts_arr % top
+    rem = rem[rem > 0]
+    if rem.size:
+        slots += int(caps_arr[np.searchsorted(caps_arr, rem)].sum())
+    return slots
 
 
 def tile_nnz_histogram(a: COOMatrix, tile: int) -> np.ndarray:
@@ -745,17 +792,24 @@ def plan_from_tiles_bucketed(
     caps=None,
     ensure_coverage: bool = True,
     with_perm: bool = True,
+    config=None,
 ) -> SCVBucketedPlan:
     """SCVTiles (host) -> nnz-bucketed device plan.
 
     ``caps`` defaults to :func:`bucket_caps_for` over the tile nnz
-    histogram.  Coverage dummies are emitted **once per plan**, in the
-    first segment only (where zero nnz buckets them anyway — the smallest
-    cap): the first kernel launch zero-defines the whole output and every
-    later launch chains through it in accumulate mode
-    (``ops.scv_spmm_plan``), so higher-cap segments never pay
-    ``n_row_blocks * cap`` dummy slots again.
+    histogram; a ``repro.tune.TunedConfig`` may be passed as ``config``
+    instead, in which case its ladder (or its single ``cap`` when the
+    ladder is empty) supplies the caps.  Coverage dummies are emitted
+    **once per plan**, in the first segment only (where zero nnz buckets
+    them anyway — the smallest cap): the first kernel launch zero-defines
+    the whole output and every later launch chains through it in
+    accumulate mode (``ops.scv_spmm_plan``), so higher-cap segments never
+    pay ``n_row_blocks * cap`` dummy slots again.
     """
+    if config is not None:
+        if caps is not None:
+            raise ValueError("pass caps or config, not both")
+        caps = tuple(config.bucket_caps) or (int(config.cap),)
     if caps is None:
         caps = bucket_caps_for(t.nnz_in_tile, t.tile)
     segs = bucket_tiles(t, caps)

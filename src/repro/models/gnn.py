@@ -37,6 +37,7 @@ import numpy as np
 from repro.core.aggregate import aggregate_scv_plan
 from repro.core.formats import COOMatrix, block_diag_coo
 from repro.core.scv import (
+    DEFAULT_TILE,
     SCVBucketedPlan,
     SCVPlan,
     coo_to_scv_tiles,
@@ -74,10 +75,11 @@ class Graph:
 
 def build_graph(
     adj: COOMatrix,
-    tile: int = 64,
+    tile: int = DEFAULT_TILE,
     backend_cap: Optional[int] = None,
     with_edges: bool = True,
     bucket_caps=None,
+    config=None,
 ) -> Graph:
     """COO adjacency -> device-ready :class:`Graph`.
 
@@ -88,7 +90,22 @@ def build_graph(
     ``None`` keeps the single-cap :class:`SCVPlan`.  When a ladder is
     active it supersedes ``backend_cap`` entirely (heavy tiles chain-split
     at ``caps[-1]``, the per-segment caps come from the ladder).
+
+    ``config`` — a ``repro.tune.TunedConfig`` (mutually exclusive with
+    the explicit layout arguments): its tile and ladder (or single cap
+    when the ladder is empty) define the whole layout, so an autotuned
+    regime threads through as one object.
     """
+    if config is not None:
+        if bucket_caps is not None or backend_cap is not None or tile != DEFAULT_TILE:
+            raise ValueError(
+                "config carries tile/cap/ladder; don't also pass them explicitly"
+            )
+        tile = config.tile
+        if config.bucket_caps:
+            bucket_caps = tuple(config.bucket_caps)
+        else:
+            backend_cap = config.cap
     if bucket_caps is not None and backend_cap is not None:
         raise ValueError(
             "backend_cap and bucket_caps are mutually exclusive: the "
@@ -313,7 +330,7 @@ class BatchedGraph:
 
 def build_batched_graph(
     adjs: list[COOMatrix],
-    tile: int = 64,
+    tile: int = DEFAULT_TILE,
     backend_cap: Optional[int] = None,
     pad_nodes: Optional[int] = None,
 ) -> BatchedGraph:

@@ -55,7 +55,13 @@ import numpy as np
 
 from repro.core.exec import ShardedPlan
 from repro.core.formats import COOMatrix
-from repro.core.scv import SCVBucketedPlan, SCVPlan
+from repro.core.scv import (
+    DEFAULT_CAP,
+    DEFAULT_LADDER,
+    DEFAULT_TILE,
+    SCVBucketedPlan,
+    SCVPlan,
+)
 from repro.core.validate import check_coo, validate_plan
 from repro.models.gnn import (
     BatchedGraph,
@@ -66,6 +72,7 @@ from repro.models.gnn import (
 )
 from repro.serve.plan_cache import PlanCache, combine_keys, coo_content_key
 from repro.stream import DeltaBatch, apply_coo, apply_delta, check_delta
+from repro.tune.config import TunedConfig
 
 
 @dataclasses.dataclass
@@ -97,8 +104,8 @@ class GraphRequest:
 class GraphEngineConfig:
     max_batch_graphs: int = 16
     max_batch_nodes: int = 4096
-    tile: int = 64
-    cap: int = 64  # per-tile entry capacity when bucket_caps is disabled
+    tile: int = DEFAULT_TILE
+    cap: int = DEFAULT_CAP  # per-tile entry capacity when bucket_caps is off
     # nnz-bucketed plans: a fixed ascending capacity ladder shared by every
     # member plan (so composites fuse segment-by-segment and jit traces are
     # shared across batches).  ON by default — the serve_bench A/B
@@ -112,7 +119,21 @@ class GraphEngineConfig:
     # within ~5%).  Empty tuple selects the legacy single-cap plans
     # (``cap``); when the ladder is set it supersedes ``cap`` (heavy
     # tiles chain-split at ``bucket_caps[-1]``).
-    bucket_caps: tuple[int, ...] = (8, 32)
+    bucket_caps: tuple[int, ...] = DEFAULT_LADDER
+    # autotuned per-regime plan configuration (repro.tune): when on, each
+    # distinct graph regime (quantized tile-nnz histogram x machine
+    # fingerprint) resolves its own (tile, ladder) via the Autotuner
+    # instead of the tile/cap/bucket_caps literals above, which then only
+    # serve as the fallback for empty graphs.  Batches group by resolved
+    # config (composite members must share tile and ladder), member and
+    # composite cache keys carry the resolved layout, and ``metrics()``
+    # reports every resolved config.  Resolution on a store hit costs one
+    # O(nnz) histogram per request per wave; a miss runs the stage-1
+    # simulator sweep (plus measured calibration when
+    # ``autotune_calibrate`` is set — leave that to offline benches).
+    autotune: bool = False
+    autotune_store: Optional[str] = None  # TuneStore path (None = in-memory)
+    autotune_calibrate: bool = False
     node_buckets: tuple[int, ...] = (256, 512, 1024, 2048, 4096)
     cache_entries: int = 256
     cache_bytes: int = 256 << 20
@@ -395,6 +416,11 @@ class _TrackedGraph:
     adj: COOMatrix
     key: str
     updates_since_anchor: int = 0  # see GraphEngineConfig.anchor_every
+    # resolved plan configuration (autotune): set at registration and
+    # refreshed at re-anchor time — deltas between anchors may drift the
+    # regime, so this is "as of last anchor", which is what metrics()
+    # reports per tracked graph
+    config: Optional["TunedConfig"] = None
 
 
 class GraphServeEngine:
@@ -440,10 +466,35 @@ class GraphServeEngine:
         # delta-tracked graphs (see update()): graph_id -> current state
         self._graphs: dict[str, _TrackedGraph] = {}
         self.n_graph_updates = 0
+        # autotuned plan configuration: the engine-config literals become
+        # one TunedConfig fallback; with cfg.autotune each regime resolves
+        # its own through the tuner's signature-keyed store
+        self._fallback_config = TunedConfig(
+            tile=cfg.tile, bucket_caps=tuple(cfg.bucket_caps), cap=cfg.cap
+        )
+        self.tuner = None
+        self._resolved_configs: dict[str, TunedConfig] = {}
+        if cfg.autotune:
+            from repro.tune import Autotuner, TuneStore
+
+            self.tuner = Autotuner(
+                store=TuneStore(cfg.autotune_store),
+                calibrate=cfg.autotune_calibrate,
+            )
+
+    def _resolve_config(self, adj: COOMatrix) -> TunedConfig:
+        """The plan configuration a wave uses for ``adj``: the tuner's
+        per-regime resolution under ``cfg.autotune``, else the engine-
+        config fallback.  Store hits cost one tile-nnz histogram."""
+        if self.tuner is None or adj.nnz == 0:
+            return self._fallback_config
+        tcfg = self.tuner.tune(adj)
+        self._resolved_configs[self.tuner.last_result.key] = tcfg
+        return tcfg
 
     def _member_content_key(self, adj: COOMatrix) -> str:
-        cap_sig = tuple(self.cfg.bucket_caps) or self.cfg.cap
-        return coo_content_key(adj, tile=self.cfg.tile, cap=cap_sig)
+        tcfg = self._resolve_config(adj)
+        return coo_content_key(adj, tile=tcfg.tile, cap=tcfg.cap_signature)
 
     def _resolve_adj(self, req: GraphRequest) -> COOMatrix:
         """The adjacency a wave serves for ``req`` — the tracked graph's
@@ -468,7 +519,9 @@ class GraphServeEngine:
                 # (re)register: carrying both adj and graph_id resets the
                 # tracked state to this adjacency (content-keyed afresh)
                 self._graphs[req.graph_id] = _TrackedGraph(
-                    adj=req.adj, key=self._member_content_key(req.adj)
+                    adj=req.adj,
+                    key=self._member_content_key(req.adj),
+                    config=self._resolve_config(req.adj),
                 )
         elif req.graph_id is None:
             raise ValueError("request needs adj (or a tracked graph_id)")
@@ -534,6 +587,7 @@ class GraphServeEngine:
             st.key = self.plan_cache.anchor(
                 st.key, self._member_content_key(st.adj)
             )
+            st.config = self._resolve_config(st.adj)
             st.updates_since_anchor = 0
         return st.key
 
@@ -555,12 +609,17 @@ class GraphServeEngine:
         The node budget counts each member's *tile-aligned* footprint — the
         size it actually occupies in the composite — so the total stays
         within the bucket ladder and never falls through to per-batch jit
-        shapes."""
-        T = self.cfg.tile
+        shapes.
+
+        Under ``cfg.autotune`` members additionally group by resolved
+        plan configuration: ``assemble_batched_graph`` requires every
+        member to share tile and ladder, so two regimes never co-batch."""
         head = self.queue[0]
         if head.isolate:  # failure isolation: re-serve a failed request alone
             self.queue = self.queue[1:]
             return [head]
+        head_cfg = self._resolve_config(self._resolve_adj(head))
+        T = head_cfg.tile
         batch, nodes = [], 0
         remaining = []
         for r in self.queue:
@@ -569,6 +628,10 @@ class GraphServeEngine:
                 and r.model == head.model
                 and len(batch) < self.cfg.max_batch_graphs
             )
+            if fits and self.tuner is not None:
+                fits = (
+                    self._resolve_config(self._resolve_adj(r)) == head_cfg
+                )
             if fits:
                 aligned = -(-self._resolve_adj(r).shape[0] // T) * T
                 fits = not batch or nodes + aligned <= self.cfg.max_batch_nodes
@@ -629,15 +692,17 @@ class GraphServeEngine:
         state *here*, at wave time: their member key is the delta-chained
         key ``update()`` maintains, so a post-update wave can never hit a
         pre-delta composite (the composite key combines member keys)."""
-        T, cap = self.cfg.tile, self.cfg.cap
-        bucket_caps = tuple(self.cfg.bucket_caps) or None
+        adjs = [self._resolve_adj(r) for r in batch]
+        # members were grouped by resolved config in _next_batch, so the
+        # head's resolution is the batch's layout
+        tcfg = self._resolve_config(adjs[0])
+        T = tcfg.tile
         _, mcfg = self.models[batch[0].model]
         with_edges = mcfg.kind == "gat"
         # the capacity layout is plan aux: it belongs in both key levels
         # (a single-cap plan and a bucketed plan of the same graph are
         # different device objects)
-        cap_sig = bucket_caps if bucket_caps else cap
-        adjs = [self._resolve_adj(r) for r in batch]
+        cap_sig = tcfg.cap_signature
         member_keys = [
             self._graphs[r.graph_id].key
             if r.graph_id is not None
@@ -657,12 +722,7 @@ class GraphServeEngine:
         def build() -> BatchedGraph:
             plans = [
                 self.plan_cache.get_or_build(
-                    k,
-                    lambda a=a: build_graph(
-                        a, tile=T,
-                        backend_cap=None if bucket_caps else cap,
-                        bucket_caps=bucket_caps,
-                    ),
+                    k, lambda a=a: build_graph(a, config=tcfg)
                 )
                 for k, a in zip(member_keys, adjs)
             ]
@@ -758,4 +818,18 @@ class GraphServeEngine:
             "plan_cache_entries": s.entries,
             "plan_cache_hit_rate": s.hit_rate,
             "plan_build_seconds": s.build_seconds,
+            # autotune: per-regime resolved configs (key = histogram
+            # signature x machine fingerprint) and per tracked graph the
+            # config as of its last registration/anchor
+            "autotune_enabled": self.tuner is not None,
+            "autotune_searches": self.tuner.searches if self.tuner else 0,
+            "autotune_cache_hits": self.tuner.cache_hits if self.tuner else 0,
+            "resolved_configs": {
+                k: c.to_json() for k, c in self._resolved_configs.items()
+            },
+            "tracked_graph_configs": {
+                gid: st.config.to_json()
+                for gid, st in self._graphs.items()
+                if st.config is not None
+            },
         }

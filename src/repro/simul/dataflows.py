@@ -99,6 +99,43 @@ def run_scv(
     return comp, traffic
 
 
+def run_scv_bucketed(
+    a: COOMatrix,
+    f: int,
+    cfg: MachineConfig,
+    tile: int,
+    caps=None,
+):
+    """:func:`run_scv` with the adjacency stream priced at the *launched*
+    bucketed capacity slots instead of logical nnz.
+
+    The device plan ships three 32-bit arrays (rows/cols/vals) per
+    capacity slot, padding included — BENCH_dist measured the nnz-priced
+    model 1.11-3.79x optimistic against placed plans — so ``bytes_a``
+    becomes ``3 * slots * E`` per feature pass, with ``slots`` from
+    :func:`core.scv.launched_slots` (chain-split at the top cap, remainder
+    in the smallest fitting cap, first-segment coverage dummies).  Compute
+    cycles and the Z/PS traffic terms are unchanged: padding slots are
+    masked, they cost bytes, not MACs.  Returns ``(comp, traffic, slots)``.
+    """
+    from repro.core.scv import bucket_caps_for, launched_slots, tile_nnz_histogram
+
+    counts = tile_nnz_histogram(a, tile)
+    if caps is None:
+        caps = bucket_caps_for(counts, tile)
+    comp, traffic = run_scv(a, f, cfg, height=tile)
+    n_row_blocks = -(-a.shape[0] // int(tile))
+    slots = launched_slots(counts, tile, caps, n_row_blocks=n_row_blocks)
+    f_pass = int(np.clip(cfg.mem_ps_bytes // (E * int(tile)), 8, f))
+    passes = -(-f // f_pass)
+    bytes_a = float(3 * slots * E) * passes
+    traffic = TrafficResult(
+        bytes_a, traffic.bytes_z, traffic.bytes_ps,
+        traffic.z_row_stream, traffic.feature_bytes,
+    )
+    return comp, traffic, slots
+
+
 def run_scv_width(
     a: COOMatrix,
     f: int,

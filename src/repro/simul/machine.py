@@ -63,6 +63,22 @@ class MachineConfig:
     def total_macs_per_cycle(self) -> int:
         return self.n_vpe * self.n_pe
 
+    def fingerprint(self) -> str:
+        """Stable short hash over every model constant.
+
+        ``repro.tune`` keys its on-disk config cache on this (plus the jax
+        backend): change any field — a different simulated machine — and
+        every cached ``TunedConfig`` goes stale by construction, because
+        its cache key no longer exists.
+        """
+        import hashlib
+
+        payload = ";".join(
+            f"{f.name}={getattr(self, f.name)!r}"
+            for f in dataclasses.fields(self)
+        )
+        return hashlib.blake2b(payload.encode(), digest_size=8).hexdigest()
+
 
 @dataclasses.dataclass
 class ComputeResult:

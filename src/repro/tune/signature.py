@@ -1,0 +1,66 @@
+"""Cache keys for tuned configs: graph-regime signature x machine fingerprint.
+
+A tuned config is reusable across graphs that *bucket the same way*, not
+across graphs that are byte-identical — so the key quantizes the tile-nnz
+histogram instead of hashing the edge list:
+
+* tile nnz values collapse into power-of-two bins (``floor(log2(nnz))``),
+  the same resolution at which :func:`core.scv.bucket_caps_for` picks caps;
+* each bin's tile count collapses to ``round(log2(count + 1))`` — a
+  half-octave count change is regime drift, a ±1-entry perturbation is not.
+
+The machine half is :meth:`simul.machine.MachineConfig.fingerprint` plus
+the jax backend platform, so a config tuned under one machine model (or
+backend) is never served under another: changing ``MachineConfig`` changes
+the fingerprint, the composite key misses, and the tuner re-searches —
+that *is* the staleness rule (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+
+import numpy as np
+
+from repro.core.scv import DEFAULT_TILE
+from repro.simul.machine import MachineConfig
+
+
+def quantize_histogram(counts: np.ndarray, tile: int) -> tuple:
+    """Quantized (log2-nnz-bin, log2-count-level) pairs, sorted.
+
+    Stable under small perturbations: moving one edge between tiles — or
+    adding/removing a tile — shifts a bin count by 1, which only changes
+    ``round(log2(count + 1))`` near power-of-two boundaries, and even then
+    by one level in one bin.
+    """
+    counts_arr = np.asarray(counts, dtype=np.int64)
+    counts_arr = counts_arr[counts_arr > 0]
+    if counts_arr.size == 0:
+        return ()
+    bins = np.floor(np.log2(counts_arr)).astype(np.int64)
+    out = []
+    for b in np.unique(bins):
+        n = int((bins == b).sum())
+        out.append((int(b), int(round(math.log2(n + 1)))))
+    return tuple(out)
+
+
+def histogram_signature(counts: np.ndarray, tile: int = DEFAULT_TILE) -> str:
+    """Short stable id of a graph regime at reference tile ``tile``."""
+    q = quantize_histogram(counts, tile)
+    payload = f"T{int(tile)};" + ";".join(f"{b}:{lvl}" for b, lvl in q)
+    return hashlib.blake2b(payload.encode(), digest_size=8).hexdigest()
+
+
+def machine_fingerprint(machine: MachineConfig | None = None) -> str:
+    """Machine half of the cache key: model constants + jax backend."""
+    if machine is None:
+        machine = MachineConfig()
+    import jax
+
+    return f"{machine.fingerprint()}-{jax.default_backend()}"
+
+
+def cache_key(signature: str, fingerprint: str) -> str:
+    return f"{signature}@{fingerprint}"

@@ -111,6 +111,37 @@ def test_scv002_owner_file_and_unrelated_literals_exempt():
     assert _rules("block = 128\nx = 1 / 8\n") == []
 
 
+def test_scv002_tunable_constants_in_repro_scope():
+    src = (
+        "tile = 64\n"
+        "cap: int = 32\n"
+        "def build(tile=128):\n"
+        "    return tile\n"
+        "bucket_caps = (8, 32)\n"
+        "serve_ladder = [16, 64]\n"
+    )
+    rules = [r for r, _ in _rules(src)]
+    assert rules.count("SCV002") == 5
+
+
+def test_scv002_tunable_constants_scoped_and_owned():
+    src = "tile = 64\nbucket_caps = (8, 32)\n"
+    # benchmarks/tests sweep candidate values by design — out of scope
+    assert _rules(src, "benchmarks/serve_bench.py") == []
+    assert _rules(src, "tests/test_foo.py") == []
+    # TunedConfig is the other sanctioned owner
+    assert _rules(src, "src/repro/tune/config.py") == []
+    # non-literal bindings thread constants legitimately
+    clean = (
+        "from repro.core.scv import DEFAULT_LADDER, DEFAULT_TILE\n"
+        "tile = DEFAULT_TILE\n"
+        "bucket_caps = DEFAULT_LADDER\n"
+        "def f(tile=DEFAULT_TILE):\n"
+        "    return tile\n"
+    )
+    assert _rules(clean) == []
+
+
 # ---------------------------------------------------------------------------
 # SCV003 — nondiff_argnums over plan leaves
 # ---------------------------------------------------------------------------

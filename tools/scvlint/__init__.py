@@ -15,7 +15,15 @@ Rules (all stdlib ``ast`` + ``tokenize``; no third-party dependency):
   constants that ``core/scv.py`` owns: the MXU/VPU ratio (``1/16`` /
   ``0.0625`` — import ``MXU_VPU_RATIO``) and chunk-size bindings whose
   name contains ``chunk`` assigned a bare ``128`` (import
-  ``DEFAULT_CHUNK``).  Drift between the roofline model and the kernel
+  ``DEFAULT_CHUNK``).  Inside ``src/repro/`` the rule further rejects
+  re-declared *tunable* plan constants: ``tile`` / ``cap`` bindings or
+  parameter defaults with integer literals, and ``bucket_caps`` /
+  ``*ladder*`` bindings with literal int tuples — these may only be
+  introduced via the ``core/scv.py`` defaults (``DEFAULT_TILE`` /
+  ``DEFAULT_CAP`` / ``DEFAULT_LADDER``) or a threaded
+  ``repro.tune.TunedConfig`` (``tune/config.py`` is the other exempt
+  owner).  Benchmarks and tests sweep candidate values by design and
+  stay out of scope.  Drift between the roofline model and the kernel
   is exactly how a "tuned" constant silently stops matching hardware.
 * **SCV003 nondiff-plan** — no ``nondiff_argnums`` positions naming
   plan-leaf parameters (``tile_row`` / ``rows`` / ``vals`` / ``perm``
@@ -266,8 +274,13 @@ class FileChecker:
 
     # -- SCV002 ------------------------------------------------------------
     def _check_magic_constants(self, tree: ast.Module, out: list[Violation]):
-        if self.rel.replace("\\", "/").endswith("core/scv.py"):
-            return  # the owner of the constants
+        rel = self.rel.replace("\\", "/")
+        if rel.endswith(("core/scv.py", "tune/config.py")):
+            return  # the owners of the constants
+        # The tunable plan constants (tile / cap / ladder) are policed
+        # inside src/repro/ only: benchmarks and tests sweep candidate
+        # values by design (serve_bench ladder A/B, kernel_bench TILE).
+        tunable_scope = "src/repro/" in rel or rel.startswith("repro/")
         for node in ast.walk(tree):
             # 1/16 or 1.0/16.0 → MXU_VPU_RATIO
             if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Div):
@@ -302,12 +315,39 @@ class FileChecker:
                     if dflt is not None:
                         targets.append((a.arg, dflt))
             for name, value in targets:
-                if "chunk" in name.lower() and _int_literal(value) == 128:
+                low = name.lower()
+                if "chunk" in low and _int_literal(value) == 128:
                     self._emit(
                         out, value, "SCV002",
                         f"`{name} = 128` duplicates core.scv.DEFAULT_CHUNK — "
                         "import it",
                     )
+                if not tunable_scope:
+                    continue
+                # tunable plan constants may only be introduced through
+                # core/scv.py defaults or a threaded TunedConfig — a
+                # re-declared literal is exactly the drift the autotuner
+                # exists to eliminate
+                if low in ("tile", "cap") and _int_literal(value) is not None:
+                    self._emit(
+                        out, value, "SCV002",
+                        f"`{name} = {_int_literal(value)}` re-declares a "
+                        f"tunable plan constant — import "
+                        f"core.scv.DEFAULT_{low.upper()} or thread a "
+                        "repro.tune.TunedConfig",
+                    )
+                if ("bucket_caps" in low or "ladder" in low) and isinstance(
+                    value, (ast.Tuple, ast.List)
+                ):
+                    if value.elts and all(
+                        _int_literal(e) is not None for e in value.elts
+                    ):
+                        self._emit(
+                            out, value, "SCV002",
+                            f"`{name} = (...)` re-declares a capacity "
+                            "ladder — import core.scv.DEFAULT_LADDER or "
+                            "thread a repro.tune.TunedConfig",
+                        )
 
     # -- SCV003 ------------------------------------------------------------
     def _check_nondiff_plan(self, tree: ast.Module, out: list[Violation]):
