@@ -19,9 +19,13 @@
 #     8-host-device mesh: tile/feature/2-D sharding bit-exact vs the
 #     single-device bucketed path, balanced spans, bounded overhead;
 #     emits BENCH_dist.json),
-#   * benchmarks/serve_bench.py (engine >= naive loop, cache hits, and the
-#     bucketed-vs-single-cap A/B that gates the flipped
-#     GraphEngineConfig.bucket_caps default; emits BENCH_serve.json),
+#   * benchmarks/serve_bench.py (engine >= naive loop, cache hits, the
+#     bucketed-vs-single-cap A/B plus the ladder-depth sweep that gates
+#     the DEFAULT_LADDER default against the measured winner, and the
+#     Poisson open-loop sync-vs-async A/B: async p99 <= sync p99 at equal
+#     offered load, async holds >= 0.9x sync graphs/s at saturation,
+#     exact-output parity vs the unbatched forward; emits
+#     BENCH_serve.json with the open-loop percentiles),
 #   * benchmarks/stream_bench.py (small-delta stream.apply_delta >= 10x a
 #     full coo_to_scv_tiles rebuild at 1M edges, byte-identical to the
 #     rebuild; engine updates land as plan-cache revalidations, never

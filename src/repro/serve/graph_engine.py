@@ -40,12 +40,18 @@ Three mechanisms make this a serving system rather than a loop:
    The sharding decision is part of the composite cache key, so hot
    oversized batches reuse their sharded layout.
 
-The engine is synchronous and single-host-process (like ``ServeEngine``);
-the launch/ layer owns process fan-out.
+The engine is single-host-process (like ``ServeEngine``); the launch/
+layer owns process fan-out.  Intake is owned by ``serve/scheduler.py``:
+the synchronous ``run()`` drains it in degenerate single-consumer waves,
+while ``start()`` hands it to the continuous-batching scheduler loop
+(mid-flight wave coalescing, deadline-aware admission, serialized
+``update()`` control messages) — see the scheduler module docstring and
+serve/README.md "Async serving".
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import Optional
@@ -67,12 +73,30 @@ from repro.models.gnn import (
     BatchedGraph,
     GNNConfig,
     Graph,
+    batch_features,
     build_graph,
-    gnn_forward_batched,
+    gnn_forward_jit,
+    split_outputs,
 )
 from repro.serve.plan_cache import PlanCache, combine_keys, coo_content_key
+from repro.serve.scheduler import (
+    AdmissionRejected,
+    EngineOverloaded,
+    Scheduler,
+    _Control,
+)
 from repro.stream import DeltaBatch, apply_coo, apply_delta, check_delta
 from repro.tune.config import TunedConfig
+
+__all__ = [
+    "AdmissionRejected",
+    "EngineOverloaded",
+    "GraphEngineConfig",
+    "GraphRequest",
+    "GraphServeEngine",
+    "assemble_batched_graph",
+    "plan_launches",
+]
 
 
 @dataclasses.dataclass
@@ -93,11 +117,36 @@ class GraphRequest:
     # graph_id (re)register the adjacency under it, and later requests may
     # omit adj to serve the tracked (delta-updated) state
     graph_id: Optional[str] = None
+    # latency budget in seconds, relative to submit time.  Admission
+    # control rejects the request up front when the deadline is infeasible
+    # at the current queue depth, and wave formation sheds it if the
+    # estimate later degrades past the budget.  None = serve whenever.
+    deadline_s: Optional[float] = None
     out: Optional[np.ndarray] = None  # f32[n_nodes, n_classes] when done
     done: bool = False
-    error: Optional[str] = None  # set when the request is ejected as failed
+    error: Optional[str] = None  # set when ejected as failed or shed
     retries: int = 0  # failed waves this request has been part of
     isolate: bool = False  # re-serve alone (failure isolation)
+    t_submit: float = 0.0  # time.monotonic() at admission
+    t_done: float = 0.0  # time.monotonic() at completion
+    # set on every terminal transition (completed / failed / shed) —
+    # async callers block on it via result()
+    event: Optional[threading.Event] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return self.t_done - self.t_submit if self.done else None
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block until this request reaches a terminal state; returns the
+        output or raises ``RuntimeError`` with the failure/shed reason."""
+        if self.event is not None and not self.event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not done after {timeout}s")
+        if self.error is not None:
+            raise RuntimeError(f"request {self.rid}: {self.error}")
+        if not self.done:
+            raise RuntimeError(f"request {self.rid} is not done")
+        return self.out
 
 
 @dataclasses.dataclass
@@ -114,9 +163,9 @@ class GraphEngineConfig:
     # accumulator-chained launches coverage dummies exist once per plan,
     # so ladder depth no longer pays a per-segment dummy set — the
     # remaining depth cost is one launch (one jnp pass on the serving
-    # backend) per extra bucket, and the 2-deep ladder measured fastest
-    # on the sparse serving pool (ladder_ab in BENCH_serve.json; 3/4-deep
-    # within ~5%).  Empty tuple selects the legacy single-cap plans
+    # backend) per extra bucket; the 3-deep ladder won the interleaved
+    # sweep on the sparse serving pool (ladder_ab in BENCH_serve.json;
+    # 2/4-deep within ~5%).  Empty tuple selects the legacy single-cap plans
     # (``cap``); when the ladder is set it supersedes ``cap`` (heavy
     # tiles chain-split at ``bucket_caps[-1]``).
     bucket_caps: tuple[int, ...] = DEFAULT_LADDER
@@ -160,6 +209,22 @@ class GraphEngineConfig:
     # Costs a host-side pass over the plan leaves — leave off in
     # production, turn on when bisecting plan corruption.
     debug_validate: bool = False
+    # --- async scheduler (serve/scheduler.py) ---------------------------
+    # a forming wave absorbs compatible arrivals until it holds
+    # target_wave_size graphs (None = max_batch_graphs) or this many
+    # milliseconds have passed since its first member arrived; 0 disables
+    # the absorb window (waves snapshot like the sync path)
+    max_wave_delay_ms: float = 2.0
+    target_wave_size: Optional[int] = None
+    # bounded intake: submit() blocks (or raises EngineOverloaded with
+    # block=False) when this many requests are queued — backpressure
+    # instead of unbounded memory growth under overload
+    intake_capacity: int = 4096
+    # completed-request latencies retained for the metrics() percentiles
+    latency_window: int = 4096
+    # smoothing for the per-model wave service-time EMA that admission
+    # control and deadline shedding estimate from
+    service_ema_alpha: float = 0.2
 
     def __post_init__(self):
         for field in ("max_batch_graphs", "max_batch_nodes", "tile", "cap"):
@@ -194,7 +259,7 @@ class GraphEngineConfig:
 # ---------------------------------------------------------------------------
 def _bucket_nodes(n: int, buckets: tuple[int, ...], tile: int) -> int:
     """Smallest bucket >= n; past the ladder (an oversized single request —
-    _next_batch always admits the head), round up to the next power of two
+    wave formation always admits the head), round up to the next power of two
     so distinct jit shapes stay logarithmic in graph size rather than one
     per request."""
     for b in sorted(buckets):
@@ -404,6 +469,29 @@ def assemble_batched_graph(
     )
 
 
+def plan_launches(plan) -> int:
+    """Device kernel launches one aggregation over ``plan`` costs.
+
+    A single-cap ``SCVPlan`` is one launch; a bucketed plan chains one
+    launch per **non-empty** capacity segment through the aliased
+    accumulator (empty segments are skipped at dispatch — see
+    ``kernels/scv_spmm/ops.scv_spmm_plan``); a sharded plan runs its
+    per-segment launches on every mesh instance
+    (``tile_parts x feature_parts`` shard_map bodies).  The forward then
+    multiplies by ``GNNConfig.n_layers`` — that factor is the caller's
+    (every model kind aggregates exactly once per layer)."""
+    if isinstance(plan, ShardedPlan):
+        per_device = sum(
+            1 for s in plan.segments if int(np.asarray(s.tile_row).size) > 0
+        )
+        return per_device * plan.decision.n_devices
+    if isinstance(plan, SCVBucketedPlan):
+        return sum(
+            1 for s in plan.segments if int(np.asarray(s.tile_row).size) > 0
+        )
+    return 1 if int(np.asarray(plan.tile_row).size) > 0 else 0
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -452,17 +540,25 @@ class GraphServeEngine:
             max_bytes=cfg.cache_bytes,
             max_age_s=cfg.plan_ttl_s,
         )
-        self.queue: list[GraphRequest] = []
+        # intake + wave formation live in the scheduler (the IntakeQueue is
+        # the single owner of queued state — scvlint SCV007)
+        self.scheduler = Scheduler(self)
         # bounded: a serving process runs forever; retaining every request
         # (adjacency + features + outputs) would grow without limit
         self.completed: deque[GraphRequest] = deque(maxlen=cfg.completed_history)
         self.failed: deque[GraphRequest] = deque(maxlen=cfg.completed_history)
+        self.shed: deque[GraphRequest] = deque(maxlen=cfg.completed_history)
         self.n_completed = 0
         self.n_failed = 0
+        self.n_rejected = 0  # AdmissionRejected at submit
         self.last_completed: list[GraphRequest] = []  # from the latest run()
-        self.n_batches = 0  # == forward launches (one per batch)
+        self.n_batches = 0  # composite waves served
+        self.n_launches = 0  # actual pallas kernel launches (see plan_launches)
         self.n_sharded_batches = 0  # waves routed through the executor
         self.serve_seconds = 0.0
+        # tuner resolution + resolved-config bookkeeping are shared between
+        # the producer thread (submit/registration) and the wave consumer
+        self._tune_lock = threading.Lock()
         # delta-tracked graphs (see update()): graph_id -> current state
         self._graphs: dict[str, _TrackedGraph] = {}
         self.n_graph_updates = 0
@@ -482,14 +578,25 @@ class GraphServeEngine:
                 calibrate=cfg.autotune_calibrate,
             )
 
+    @property
+    def queue(self) -> list[GraphRequest]:
+        """Read-only snapshot of the queued requests.  Intake is owned by
+        the scheduler's ``IntakeQueue`` (bounded, thread-safe); direct
+        queue mutation in the serving layer is rejected by scvlint SCV007
+        so every path goes through admission accounting."""
+        return self.scheduler.queue.items()
+
     def _resolve_config(self, adj: COOMatrix) -> TunedConfig:
         """The plan configuration a wave uses for ``adj``: the tuner's
         per-regime resolution under ``cfg.autotune``, else the engine-
-        config fallback.  Store hits cost one tile-nnz histogram."""
+        config fallback.  Store hits cost one tile-nnz histogram.
+        Serialized under ``_tune_lock``: submit-side registration and the
+        wave consumer both resolve configs."""
         if self.tuner is None or adj.nnz == 0:
             return self._fallback_config
-        tcfg = self.tuner.tune(adj)
-        self._resolved_configs[self.tuner.last_result.key] = tcfg
+        with self._tune_lock:
+            tcfg = self.tuner.tune(adj)
+            self._resolved_configs[self.tuner.last_result.key] = tcfg
         return tcfg
 
     def _member_content_key(self, adj: COOMatrix) -> str:
@@ -506,7 +613,22 @@ class GraphServeEngine:
             return self._graphs[req.graph_id].adj
         return req.adj
 
-    def submit(self, req: GraphRequest) -> None:
+    def submit(
+        self,
+        req: GraphRequest,
+        *,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> GraphRequest:
+        """Validate and enqueue a request; returns it (callers block on
+        ``req.result()`` in async mode).
+
+        Admission control may raise: ``AdmissionRejected`` when the
+        request carries a ``deadline_s`` that is infeasible at the current
+        queue depth (per-model service-time EMA), and ``EngineOverloaded``
+        when the bounded intake queue stays full (with ``block=False`` it
+        fails fast; otherwise after ``timeout`` seconds — backpressure
+        instead of unbounded queue growth)."""
         if req.model not in self.models:
             raise KeyError(f"unknown model {req.model!r}; have {list(self.models)}")
         if req.adj is not None:
@@ -545,10 +667,32 @@ class GraphServeEngine:
                 f"features shape {req.x.shape} incompatible with model "
                 f"{req.model!r} (d_in={mcfg.d_in})"
             )
-        self.queue.append(req)
+        req.t_submit = now = time.monotonic()
+        if req.event is None:
+            req.event = threading.Event()
+        try:
+            self.scheduler.admit(req, now)
+        except AdmissionRejected:
+            self.n_rejected += 1
+            raise
+        if not self.scheduler.queue.put(req, block=block, timeout=timeout):
+            raise EngineOverloaded(
+                f"intake queue full ({self.cfg.intake_capacity} requests)"
+                + (f" after waiting {timeout}s" if timeout is not None else "")
+            )
+        return req
 
     def update(self, graph_id: str, delta: DeltaBatch) -> str:
         """Apply an edge delta to a tracked graph; returns its new plan key.
+
+        With the async scheduler loop running, the delta is enqueued as a
+        serialized **control message** and applied by the loop *between*
+        waves — a mutation can never race a wave that is concurrently
+        reading the tracked adjacency or revalidating the plan cache.
+        This call blocks until the loop acknowledges, so the caller's
+        happens-before is preserved: every request submitted after
+        ``update()`` returns serves the post-delta graph.  Without the
+        loop it applies inline (the historical synchronous behavior).
 
         Admission runs ``stream.check_delta`` against the tracked
         adjacency (out-of-range ids, non-finite values, removes of absent
@@ -562,6 +706,24 @@ class GraphServeEngine:
         combine the member keys, so the re-keyed member can never resolve
         a pre-delta composite — stale entries just age out of the LRU.
         """
+        if self.scheduler.running:
+            ctrl = _Control(apply=lambda: self._apply_update(graph_id, delta))
+            self.scheduler.queue.put_control(ctrl)
+            while not ctrl.done.wait(0.05):
+                if not self.scheduler.running:
+                    # the loop exited between enqueue and apply: drain the
+                    # control inline (pop_controls is atomic, so the
+                    # message is applied exactly once either way)
+                    self.scheduler._apply_controls()
+                    break
+            if not ctrl.done.is_set():
+                self.scheduler._apply_controls()
+            if ctrl.error is not None:
+                raise ctrl.error
+            return ctrl.result
+        return self._apply_update(graph_id, delta)
+
+    def _apply_update(self, graph_id: str, delta: DeltaBatch) -> str:
         st = self._graphs.get(graph_id)
         if st is None:
             raise KeyError(
@@ -600,48 +762,6 @@ class GraphServeEngine:
                 "register it"
             )
         return st.adj
-
-    # -- batching ----------------------------------------------------------
-    def _next_batch(self) -> list[GraphRequest]:
-        """Greedy in-arrival-order pack: same model kind, bounded graph and
-        node counts.  Always admits at least one request.
-
-        The node budget counts each member's *tile-aligned* footprint — the
-        size it actually occupies in the composite — so the total stays
-        within the bucket ladder and never falls through to per-batch jit
-        shapes.
-
-        Under ``cfg.autotune`` members additionally group by resolved
-        plan configuration: ``assemble_batched_graph`` requires every
-        member to share tile and ladder, so two regimes never co-batch."""
-        head = self.queue[0]
-        if head.isolate:  # failure isolation: re-serve a failed request alone
-            self.queue = self.queue[1:]
-            return [head]
-        head_cfg = self._resolve_config(self._resolve_adj(head))
-        T = head_cfg.tile
-        batch, nodes = [], 0
-        remaining = []
-        for r in self.queue:
-            fits = (
-                not r.isolate
-                and r.model == head.model
-                and len(batch) < self.cfg.max_batch_graphs
-            )
-            if fits and self.tuner is not None:
-                fits = (
-                    self._resolve_config(self._resolve_adj(r)) == head_cfg
-                )
-            if fits:
-                aligned = -(-self._resolve_adj(r).shape[0] // T) * T
-                fits = not batch or nodes + aligned <= self.cfg.max_batch_nodes
-            if fits:
-                batch.append(r)
-                nodes += aligned
-            else:
-                remaining.append(r)
-        self.queue = remaining
-        return batch
 
     # -- plans -------------------------------------------------------------
     def _shard_decision(self, adjs, bucket: int, mcfg):
@@ -693,8 +813,8 @@ class GraphServeEngine:
         key ``update()`` maintains, so a post-update wave can never hit a
         pre-delta composite (the composite key combines member keys)."""
         adjs = [self._resolve_adj(r) for r in batch]
-        # members were grouped by resolved config in _next_batch, so the
-        # head's resolution is the batch's layout
+        # members were grouped by resolved config at wave formation
+        # (Scheduler._pick_wave), so the head's resolution is the layout
         tcfg = self._resolve_config(adjs[0])
         T = tcfg.tile
         _, mcfg = self.models[batch[0].model]
@@ -742,7 +862,10 @@ class GraphServeEngine:
 
     # -- serving -----------------------------------------------------------
     def run(self) -> list[GraphRequest]:
-        """Serve every queued request; returns the newly completed ones.
+        """Serve every queued request synchronously; returns the newly
+        completed ones.  The degenerate single-consumer case of the
+        scheduler (waves form with no absorb window — exactly the
+        historical snapshot loop).
 
         A wave that raises re-raises out of run() with its requests either
         requeued (isolated, up to ``max_retries``) or ejected to
@@ -753,58 +876,126 @@ class GraphServeEngine:
         (BaseExceptions that are not Exceptions, e.g. KeyboardInterrupt)
         restore the wave untouched: they are not request failures and
         consume no retries."""
-        t0 = time.perf_counter()
-        done = self.last_completed = []
-        while self.queue:
-            batch = self._next_batch()
-            try:
-                bg = self._batch_plan(batch)
-                params, mcfg = self.models[batch[0].model]
-                outs = gnn_forward_batched(params, mcfg, bg, [r.x for r in batch])
-            except BaseException as e:
-                if not isinstance(e, Exception):
-                    self.queue = batch + self.queue
-                    self.serve_seconds += time.perf_counter() - t0
-                    raise
-                # A failed wave must not lose its requests — but blind
-                # requeueing would wedge the engine on a poison request.
-                # Surviving members go back isolated (served alone next
-                # run, so one bad member cannot keep failing a whole
-                # wave); a request that exhausts max_retries is ejected
-                # to ``failed`` with the error recorded.
-                survivors = []
-                for r in batch:
-                    r.retries += 1
-                    if r.retries > self.cfg.max_retries:
-                        r.error = f"{type(e).__name__}: {e}"
-                        self.failed.append(r)
-                        self.n_failed += 1
-                    else:
-                        r.isolate = True
-                        survivors.append(r)
-                self.queue = survivors + self.queue
-                self.serve_seconds += time.perf_counter() - t0
-                raise
-            self.n_batches += 1
-            if isinstance(bg.graph.plan, ShardedPlan):
-                self.n_sharded_batches += 1
-            for r, o in zip(batch, outs):
-                r.out = o
-                r.done = True
-                self.completed.append(r)
-                self.n_completed += 1
-                done.append(r)
-        self.serve_seconds += time.perf_counter() - t0
+        if self.scheduler.running:
+            raise RuntimeError(
+                "the async scheduler loop is running; use wait_idle() to "
+                "block on completion or stop() before sync run()"
+            )
+        return self.scheduler.drain()
+
+    def _dispatch_wave(self, wave: list[GraphRequest]):
+        """Assemble a wave's composite and launch the jitted forward;
+        returns ``(bg, out)`` with ``out`` **unmaterialized** — jax async
+        dispatch returns once the work is enqueued, so the scheduler can
+        overlap host-side assembly of the next wave (plan-cache lookups,
+        composite concatenation) with this wave's device time."""
+        bg = self._batch_plan(wave)
+        params, mcfg = self.models[wave[0].model]
+        out = gnn_forward_jit(
+            params, mcfg, bg.graph, batch_features(bg, [r.x for r in wave])
+        )
+        return bg, out
+
+    def _finish_wave(self, wave, bg, out) -> list[GraphRequest]:
+        """Materialize a dispatched wave's outputs (blocks on the device),
+        complete its requests, and account the wave."""
+        outs = split_outputs(bg, out)  # np.asarray: the device sync point
+        self.n_batches += 1
+        if isinstance(bg.graph.plan, ShardedPlan):
+            self.n_sharded_batches += 1
+        _, mcfg = self.models[wave[0].model]
+        # every model kind aggregates once per layer, so a wave costs
+        # (launches per aggregation) x n_layers kernel launches
+        self.n_launches += plan_launches(bg.graph.plan) * mcfg.n_layers
+        now = time.monotonic()
+        done = []
+        for r, o in zip(wave, outs):
+            r.out = o
+            r.done = True
+            r.t_done = now
+            self.completed.append(r)
+            self.n_completed += 1
+            if r.t_submit:
+                self.scheduler.record_latency(now - r.t_submit)
+            if r.event is not None:
+                r.event.set()
+            done.append(r)
         return done
+
+    # -- terminal transitions (called by the scheduler) --------------------
+    def _shed_request(self, req: GraphRequest, msg: str) -> None:
+        """Deadline shed: admitted under an estimate that later degraded."""
+        req.error = msg
+        self.shed.append(req)
+        if req.event is not None:
+            req.event.set()
+
+    def _eject_failed(self, req: GraphRequest, msg: str) -> None:
+        """Ejection after ``max_retries`` failed waves."""
+        req.error = msg
+        self.failed.append(req)
+        self.n_failed += 1
+        if req.event is not None:
+            req.event.set()
+
+    # -- async lifecycle ---------------------------------------------------
+    def start(self) -> None:
+        """Start the continuous-batching scheduler loop: waves coalesce
+        mid-flight and overlap device compute (serve/scheduler.py)."""
+        self.scheduler.start()
+
+    def stop(self, timeout: Optional[float] = None, drain: bool = True) -> None:
+        """Stop the scheduler loop (draining queued work first by
+        default).  Re-raises an interrupt the loop stashed."""
+        self.scheduler.stop(timeout=timeout, drain=drain)
+
+    @property
+    def running(self) -> bool:
+        return self.scheduler.running
+
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        """Block until the intake queue is empty and no wave is in flight
+        (async mode); returns False on timeout."""
+        deadline = (
+            time.monotonic() + timeout if timeout is not None else None
+        )
+        sched = self.scheduler
+        while (
+            sched.queue.depth()
+            or sched.queue.has_controls()
+            or sched._inflight
+        ):
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            time.sleep(0.002)
+        return True
 
     def metrics(self) -> dict:
         s = self.plan_cache.stats
+        sched = self.scheduler
+        lat = sched.latency_percentiles()
         return {
             "batches": self.n_batches,
             "sharded_batches": self.n_sharded_batches,
-            "launches": self.n_batches,  # one forward launch per batch
+            # actual pallas kernel launches: a bucketed plan chains one
+            # launch per non-empty capacity segment (x mesh shards when
+            # sharded) and the forward aggregates once per layer — see
+            # plan_launches()
+            "launches": self.n_launches,
             "completed": self.n_completed,
             "failed": self.n_failed,
+            "shed": sched.n_shed,
+            "rejected": self.n_rejected,
+            "waves": sched.n_waves,
+            "wave_fill": sched.wave_fill,
+            "queue_depth": sched.queue.depth(),
+            "queue_depth_by_group": sched.queue_depth_by_group(),
+            "latency_count": lat["count"],
+            "latency_p50_s": lat["p50_s"],
+            "latency_p99_s": lat["p99_s"],
+            "latency_mean_s": lat["mean_s"],
+            "service_ema_s": sched.service_emas(),
+            "async_running": sched.running,
             "serve_seconds": self.serve_seconds,
             "plan_cache_hits": s.hits,
             "plan_cache_misses": s.misses,

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
 from collections import OrderedDict
 from typing import Any, Callable, Iterable, Optional
@@ -170,6 +171,15 @@ class PlanCache:
     ``max_age_s`` (optional) bounds entry staleness: lookups drop entries
     older than the TTL and report a miss, so hot keys are rebuilt in place.
     ``clock`` is injectable for tests (monotonic seconds).
+
+    Thread safety: every public method takes one reentrant lock, so
+    concurrent lookups, revalidations, and anchors never observe a
+    half-applied mutation (the async scheduler loop builds/revalidates
+    while other threads read metrics or probe keys).  The lock is held
+    across ``get_or_build``'s builder call — reentrancy is what lets a
+    composite build nest its member builds — which serializes builders;
+    that is the engine's single-consumer discipline anyway (only the
+    scheduler thread builds plans).
     """
 
     def __init__(
@@ -192,17 +202,21 @@ class PlanCache:
         self._entries: OrderedDict[str, _Entry] = OrderedDict()
         self.stats = PlanCacheStats()
         self._build_depth = 0  # nested get_or_build (composite -> members)
+        self._lock = threading.RLock()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key: str) -> bool:
-        return self._live_entry(key) is not None
+        with self._lock:
+            return self._live_entry(key) is not None
 
     @property
     def keys(self) -> list[str]:
         """Keys in LRU order (least-recently-used first)."""
-        return list(self._entries)
+        with self._lock:
+            return list(self._entries)
 
     def _live_entry(self, key: str) -> Optional[_Entry]:
         """Entry for ``key`` if present and within TTL; expired entries are
@@ -221,35 +235,38 @@ class PlanCache:
     def get(self, key: str) -> Optional[Any]:
         """Look up a plan; counts a hit/miss and refreshes recency.
         An entry past ``max_age_s`` counts as a miss (and is dropped)."""
-        e = self._live_entry(key)
-        if e is None:
-            self.stats.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.stats.hits += 1
-        return e.value
+        with self._lock:
+            e = self._live_entry(key)
+            if e is None:
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return e.value
 
     def peek(self, key: str) -> Optional[Any]:
         """Look up without touching recency or hit/miss counters
         (introspection); still drops entries past the TTL."""
-        e = self._live_entry(key)
-        return e.value if e is not None else None
+        with self._lock:
+            e = self._live_entry(key)
+            return e.value if e is not None else None
 
     def put(self, key: str, value: Any, nbytes: Optional[int] = None) -> None:
         if nbytes is None:
             nbytes = plan_nbytes(value)
-        old = self._entries.pop(key, None)
-        if old is not None:
-            self.stats.bytes_in_use -= old.nbytes
-        if nbytes > self.max_bytes:
-            # an entry that can never fit would evict the whole cache on its
-            # way in and then be evicted itself — skip it instead
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self.stats.bytes_in_use -= old.nbytes
+            if nbytes > self.max_bytes:
+                # an entry that can never fit would evict the whole cache on
+                # its way in and then be evicted itself — skip it instead
+                self.stats.entries = len(self._entries)
+                return
+            self._entries[key] = _Entry(value, int(nbytes), created=self._clock())
+            self.stats.bytes_in_use += int(nbytes)
+            self._evict()
             self.stats.entries = len(self._entries)
-            return
-        self._entries[key] = _Entry(value, int(nbytes), created=self._clock())
-        self.stats.bytes_in_use += int(nbytes)
-        self._evict()
-        self.stats.entries = len(self._entries)
 
     def get_or_build(
         self,
@@ -260,25 +277,26 @@ class PlanCache:
         """Return the cached plan for ``key``, building (and caching) it on
         a miss.  Oversized plans (> max_bytes on their own) are still
         returned but not retained."""
-        value = self.get(key)
-        if value is not None:
+        with self._lock:
+            value = self.get(key)
+            if value is not None:
+                return value
+            # build_seconds accumulates only at the outermost nesting level:
+            # a composite builder calls get_or_build for its members, and
+            # the outer elapsed time already contains theirs
+            self._build_depth += 1
+            t0 = time.perf_counter()
+            try:
+                value = builder()
+            finally:
+                dt = time.perf_counter() - t0
+                self._build_depth -= 1
+                if self._build_depth == 0:
+                    self.stats.build_seconds += dt
+            nb = plan_nbytes(value) if nbytes is None else int(nbytes)
+            if nb <= self.max_bytes:
+                self.put(key, value, nb)
             return value
-        # build_seconds accumulates only at the outermost nesting level:
-        # a composite builder calls get_or_build for its members, and the
-        # outer elapsed time already contains theirs
-        self._build_depth += 1
-        t0 = time.perf_counter()
-        try:
-            value = builder()
-        finally:
-            dt = time.perf_counter() - t0
-            self._build_depth -= 1
-            if self._build_depth == 0:
-                self.stats.build_seconds += dt
-        nb = plan_nbytes(value) if nbytes is None else int(nbytes)
-        if nb <= self.max_bytes:
-            self.put(key, value, nb)
-        return value
 
     def revalidate(
         self,
@@ -299,15 +317,16 @@ class PlanCache:
         revalidation degrades to a plain miss, never to a stale hit.
         """
         new_key = delta_key(key, delta)
-        e = self._live_entry(key)
-        if e is None or patch is None:
+        with self._lock:
+            e = self._live_entry(key)
+            if e is None or patch is None:
+                return new_key
+            self._entries.pop(key)
+            self.stats.bytes_in_use -= e.nbytes
+            self.stats.entries = len(self._entries)
+            self.put(new_key, patch(e.value))
+            self.stats.revalidated += 1
             return new_key
-        self._entries.pop(key)
-        self.stats.bytes_in_use -= e.nbytes
-        self.stats.entries = len(self._entries)
-        self.put(new_key, patch(e.value))
-        self.stats.revalidated += 1
-        return new_key
 
     def anchor(self, key: str, content_key: str) -> str:
         """Re-home a live entry from a delta-chained key to the content
@@ -322,14 +341,15 @@ class PlanCache:
         entry is dead (evicted/expired) the content key is still returned
         so the caller re-keys and the next build lands content-addressed.
         """
-        e = self._live_entry(key)
-        if e is None or content_key == key:
+        with self._lock:
+            e = self._live_entry(key)
+            if e is None or content_key == key:
+                return content_key
+            self._entries.pop(key)
+            self.stats.bytes_in_use -= e.nbytes
+            self.put(content_key, e.value, e.nbytes)
+            self.stats.anchored += 1
             return content_key
-        self._entries.pop(key)
-        self.stats.bytes_in_use -= e.nbytes
-        self.put(content_key, e.value, e.nbytes)
-        self.stats.anchored += 1
-        return content_key
 
     def _evict(self) -> None:
         while self._entries and (
@@ -341,6 +361,7 @@ class PlanCache:
             self.stats.evictions += 1
 
     def clear(self) -> None:
-        self._entries.clear()
-        self.stats.bytes_in_use = 0
-        self.stats.entries = 0
+        with self._lock:
+            self._entries.clear()
+            self.stats.bytes_in_use = 0
+            self.stats.entries = 0

@@ -280,3 +280,47 @@ def test_plan_nbytes_walks_real_graph_bundle():
 def test_plan_nbytes_dedupes_shared_arrays():
     arr = np.zeros(1000, np.float32)
     assert plan_nbytes({"a": arr, "b": arr}) == arr.nbytes
+
+
+# ---------------------------------------------------------------------------
+# thread safety (the async scheduler shares the cache with producers)
+# ---------------------------------------------------------------------------
+def test_cache_threadsafe_under_concurrent_mixed_load():
+    """Hammer one cache from several threads mixing get_or_build,
+    revalidate, anchor, and reads.  The contract (plan_cache.py docstring)
+    is internal-consistency under concurrency: no lost byte accounting,
+    no KeyError crashes, counters that add up."""
+    import threading
+
+    c = PlanCache(max_entries=64, max_bytes=1 << 20)
+    errors = []
+    barrier = threading.Barrier(4)
+
+    def worker(tid):
+        try:
+            barrier.wait(timeout=10)
+            for i in range(200):
+                k = f"k{(tid + i) % 8}"
+                c.get_or_build(k, lambda: np.zeros(16, np.float32))
+                if i % 5 == 0:
+                    d = DeltaBatch.of(inserts=[(0, tid, float(i + 1))])
+                    c.revalidate(k, d, patch=lambda v: v)
+                if i % 7 == 0:
+                    c.anchor(f"k{tid}", f"anchored{tid}")
+                c.get(k)
+                c.peek(k)
+                len(c), list(c.keys)
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert errors == []
+    s = c.stats
+    assert s.hits + s.misses > 0
+    # byte accounting survived: recompute from the live entries
+    assert s.entries == len(c.keys)
+    assert s.bytes_in_use >= 0

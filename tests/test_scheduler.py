@@ -1,0 +1,481 @@
+"""Async serving loop: continuous batching, admission control, intake
+queue ownership, and failure semantics under concurrency.
+
+The sync-path behaviors these build on (wave packing, parity, failure
+isolation in ``run()``) are covered in test_serve_graph.py; this module
+exercises the scheduler loop (``engine.start()``) and the intake
+primitives it is built from.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models.gnn import GNNConfig, build_graph, gnn_forward, init_gnn
+from repro.serve.graph_engine import (
+    AdmissionRejected,
+    EngineOverloaded,
+    GraphEngineConfig,
+    GraphRequest,
+    GraphServeEngine,
+)
+from repro.serve.scheduler import IntakeQueue, _Control
+from repro.simul.datasets import gcn_normalize, powerlaw_graph
+from repro.stream import DeltaBatch
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def _graphs(sizes, seed=0):
+    return [
+        gcn_normalize(powerlaw_graph(n, 4 * n, seed=seed + i))
+        for i, n in enumerate(sizes)
+    ]
+
+
+def _features(rng, adjs, d):
+    return [rng.standard_normal((a.shape[0], d)).astype(np.float32) for a in adjs]
+
+
+def _engine(kind="gcn", **cfg_kw):
+    cfg = GNNConfig(name=kind, kind=kind, d_in=8, d_hidden=8, n_classes=4)
+    params, _ = init_gnn(jax.random.PRNGKey(0), cfg)
+    ecfg = GraphEngineConfig(tile=64, cap=64, **cfg_kw)
+    return GraphServeEngine({kind: (params, cfg)}, ecfg), params, cfg
+
+
+def _reference(params, cfg, adj, x):
+    return np.asarray(
+        gnn_forward(params, cfg, build_graph(adj, tile=64, backend_cap=64), x)
+    )
+
+
+# ---------------------------------------------------------------------------
+# IntakeQueue: the single owner of queued serving state
+# ---------------------------------------------------------------------------
+def test_intake_queue_bounded_put():
+    q = IntakeQueue(2)
+    assert q.put(GraphRequest(rid=0), block=False)
+    assert q.put(GraphRequest(rid=1), block=False)
+    assert q.depth() == 2
+    assert not q.put(GraphRequest(rid=2), block=False)
+    assert not q.put(GraphRequest(rid=2), block=True, timeout=0.02)
+    assert q.depth() == 2  # failed puts never enqueue
+
+
+def test_intake_queue_requeue_exempt_from_capacity():
+    q = IntakeQueue(1)
+    a, b, c = (GraphRequest(rid=i) for i in range(3))
+    assert q.put(a, block=False)
+    # a failed wave's requests were already admitted once: requeue must
+    # not drop them even when the queue is at capacity, and they go back
+    # at the front (they were next in line)
+    q.requeue([b, c])
+    assert [r.rid for r in q.items()] == [1, 2, 0]
+    assert q.depth() == 3
+
+
+def test_intake_queue_snapshot_commit_preserves_late_arrivals():
+    q = IntakeQueue(8)
+    a, b, c = (GraphRequest(rid=i) for i in range(3))
+    q.put(a), q.put(b)
+    items, n = q.snapshot()
+    assert [r.rid for r in items] == [0, 1] and n == 2
+    q.put(c)  # arrives between snapshot and commit
+    q.commit(n, [b])  # consumer took a, left b
+    assert [r.rid for r in q.items()] == [1, 2]
+
+
+def test_intake_queue_controls_bypass_capacity():
+    q = IntakeQueue(1)
+    q.put(GraphRequest(rid=0), block=False)
+    ctrl = _Control(apply=lambda: "done")
+    q.put_control(ctrl)  # full queue must not block a control message
+    assert q.has_controls()
+    assert q.wait_for_work(timeout=0)
+    popped = q.pop_controls()
+    assert popped == [ctrl] and not q.has_controls()
+
+
+def test_intake_queue_wait_for_work_times_out():
+    q = IntakeQueue(4)
+    t0 = time.monotonic()
+    assert not q.wait_for_work(timeout=0.02)
+    assert time.monotonic() - t0 < 1.0
+
+
+def test_engine_queue_property_is_a_snapshot():
+    eng, _, _ = _engine()
+    assert eng.queue == []
+    # the property returns a copy: mutating it must not touch intake
+    # state (the IntakeQueue is the single owner — scvlint SCV007)
+    snap = eng.queue
+    snap.append("garbage")
+    assert eng.queue == []
+
+
+# ---------------------------------------------------------------------------
+# async loop: parity, lifecycle
+# ---------------------------------------------------------------------------
+def test_async_loop_outputs_match_reference(rng):
+    adjs = _graphs([70, 130, 50, 200], seed=5)
+    xs = _features(rng, adjs, 8)
+    eng, params, cfg = _engine(max_wave_delay_ms=5.0)
+    eng.start()
+    try:
+        reqs = [
+            eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+            for i, (a, x) in enumerate(zip(adjs, xs))
+        ]
+        for r, a, x in zip(reqs, adjs, xs):
+            out = r.result(timeout=60)
+            np.testing.assert_allclose(
+                out, _reference(params, cfg, a, x), atol=1e-5, rtol=1e-5
+            )
+            assert r.latency_s is not None and r.latency_s >= 0
+    finally:
+        eng.stop(timeout=30)
+    assert not eng.running
+    m = eng.metrics()
+    assert m["completed"] == 4 and m["queue_depth"] == 0
+    assert m["waves"] >= 1 and m["launches"] > 0
+
+
+def test_sync_run_refused_while_loop_running():
+    eng, _, _ = _engine()
+    eng.start()
+    try:
+        with pytest.raises(RuntimeError, match="scheduler loop is running"):
+            eng.run()
+    finally:
+        eng.stop(timeout=30)
+    eng.run()  # fine again once stopped
+
+
+def test_stop_drains_queued_work(rng):
+    adjs = _graphs([60, 90], seed=3)
+    xs = _features(rng, adjs, 8)
+    eng, _, _ = _engine()
+    eng.start()
+    reqs = [
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+        for i, (a, x) in enumerate(zip(adjs, xs))
+    ]
+    eng.stop(timeout=60)  # drain=True: queued work completes first
+    assert all(r.done for r in reqs)
+    assert eng.metrics()["queue_depth"] == 0
+
+
+def test_wait_idle(rng):
+    adjs = _graphs([60], seed=4)
+    xs = _features(rng, adjs, 8)
+    eng, _, _ = _engine()
+    eng.start()
+    try:
+        req = eng.submit(GraphRequest(rid=0, adj=adjs[0], x=xs[0], model="gcn"))
+        assert eng.wait_idle(timeout=60)
+        assert req.done
+    finally:
+        eng.stop(timeout=30)
+
+
+# ---------------------------------------------------------------------------
+# failure semantics under the async loop
+# ---------------------------------------------------------------------------
+def test_async_poison_ejected_healthy_complete(rng):
+    """A request whose wave always fails is isolated and finally ejected
+    after max_retries, while healthy requests — including those co-batched
+    with it in the failing wave — keep completing under continuous intake."""
+    adjs = _graphs([60, 80, 100], seed=9)
+    eng, params, cfg = _engine(max_retries=1, max_wave_delay_ms=5.0)
+    POISON = 999
+    orig = eng._dispatch_wave
+
+    def dispatch(wave):
+        if any(r.rid == POISON for r in wave):
+            raise RuntimeError("poisoned wave")
+        return orig(wave)
+
+    eng._dispatch_wave = dispatch
+    eng.start()
+    healthy = []
+    try:
+        rng2 = np.random.default_rng(1)
+        for i in range(9):
+            if i == 4:
+                a = adjs[0]
+                x = rng2.standard_normal((a.shape[0], 8)).astype(np.float32)
+                poison = eng.submit(
+                    GraphRequest(rid=POISON, adj=a, x=x, model="gcn")
+                )
+            a = adjs[i % len(adjs)]
+            x = rng2.standard_normal((a.shape[0], 8)).astype(np.float32)
+            healthy.append(
+                eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+            )
+            time.sleep(0.005)  # keep intake continuous, not one burst
+        for r in healthy:
+            out = r.result(timeout=60)
+            np.testing.assert_allclose(
+                out, _reference(params, cfg, r.adj, r.x), atol=1e-5, rtol=1e-5
+            )
+        with pytest.raises(RuntimeError, match="poisoned wave"):
+            poison.result(timeout=60)
+    finally:
+        eng.stop(timeout=30)
+    assert poison in eng.failed and not poison.done
+    assert poison.retries > eng.cfg.max_retries
+    m = eng.metrics()
+    assert m["completed"] == 9 and m["failed"] == 1 and m["queue_depth"] == 0
+
+
+def test_async_interrupt_restores_queue_untouched(rng):
+    """KeyboardInterrupt mid-wave is not a request failure: the loop
+    restores the wave to the front of the queue verbatim (no retries
+    consumed, no isolation) and stop() re-raises the interrupt."""
+    adjs = _graphs([60, 90, 120], seed=11)
+    xs = _features(rng, adjs, 8)
+    eng, params, cfg = _engine()
+    orig = eng._dispatch_wave
+    tripped = threading.Event()
+
+    def dispatch(wave):
+        tripped.set()
+        raise KeyboardInterrupt
+
+    eng._dispatch_wave = dispatch
+    reqs = [
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+        for i, (a, x) in enumerate(zip(adjs, xs))
+    ]
+    eng.start()
+    assert tripped.wait(timeout=60)
+    deadline = time.monotonic() + 60
+    while eng.scheduler.running and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert not eng.scheduler.running  # the loop stopped itself
+    # queue restored untouched: same requests, no retries, no isolation
+    assert {id(r) for r in eng.queue} == {id(r) for r in reqs}
+    assert all(r.retries == 0 and not r.isolate for r in reqs)
+    with pytest.raises(KeyboardInterrupt):
+        eng.stop(timeout=30)
+    # recovery: the untouched queue drains normally
+    del eng._dispatch_wave
+    done = eng.run()
+    assert {r.rid for r in done} == {0, 1, 2}
+    for r in done:
+        np.testing.assert_allclose(
+            r.out, _reference(params, cfg, r.adj, r.x), atol=1e-5, rtol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# admission control: deadlines, backpressure
+# ---------------------------------------------------------------------------
+def test_deadline_rejected_at_submit(rng):
+    adjs = _graphs([80], seed=13)
+    xs = _features(rng, adjs, 8)
+    eng, _, _ = _engine()
+    eng.start()
+    try:
+        # first completed wave seeds the per-model service-time EMA
+        eng.submit(
+            GraphRequest(rid=0, adj=adjs[0], x=xs[0], model="gcn")
+        ).result(timeout=60)
+        assert eng.scheduler.service_estimate("gcn") is not None
+        with pytest.raises(AdmissionRejected, match="infeasible"):
+            eng.submit(
+                GraphRequest(
+                    rid=1, adj=adjs[0], x=xs[0], model="gcn", deadline_s=1e-4
+                )
+            )
+    finally:
+        eng.stop(timeout=30)
+    m = eng.metrics()
+    assert m["rejected"] == 1 and m["completed"] == 1
+    assert m["service_ema_s"].get("gcn", 0) > 0
+
+
+def test_deadline_shed_at_wave_formation(rng):
+    """A request admitted optimistically (no EMA yet) whose budget expires
+    while queued is shed at wave formation, not served late."""
+    adjs = _graphs([80], seed=14)
+    xs = _features(rng, adjs, 8)
+    eng, _, _ = _engine()
+    req = eng.submit(
+        GraphRequest(rid=0, adj=adjs[0], x=xs[0], model="gcn", deadline_s=0.005)
+    )
+    time.sleep(0.05)  # budget expires while queued
+    done = eng.run()
+    assert done == [] and not req.done
+    assert req in eng.shed
+    with pytest.raises(RuntimeError, match="deadline shed"):
+        req.result(timeout=1)
+    assert eng.metrics()["shed"] == 1
+
+
+def test_backpressure_bounded_intake(rng):
+    adjs = _graphs([60], seed=15)
+    xs = _features(rng, adjs, 8)
+    eng, _, _ = _engine(intake_capacity=2)
+    for i in range(2):
+        eng.submit(GraphRequest(rid=i, adj=adjs[0], x=xs[0], model="gcn"))
+    with pytest.raises(EngineOverloaded, match="intake queue full"):
+        eng.submit(
+            GraphRequest(rid=2, adj=adjs[0], x=xs[0], model="gcn"),
+            block=False,
+        )
+    with pytest.raises(EngineOverloaded, match="after waiting"):
+        eng.submit(
+            GraphRequest(rid=2, adj=adjs[0], x=xs[0], model="gcn"),
+            timeout=0.02,
+        )
+    assert len(eng.run()) == 2  # backpressure never corrupted the queue
+
+
+# ---------------------------------------------------------------------------
+# update() as a serialized control message
+# ---------------------------------------------------------------------------
+def _value_update(adj, idx, val):
+    coords = [(int(adj.rows[i]), int(adj.cols[i])) for i in idx]
+    return DeltaBatch.of(inserts=[(r, c, val) for r, c in coords],
+                         removes=coords)
+
+
+def test_update_interleaved_with_inflight_requests(rng):
+    """Deltas applied while the loop serves concurrent traffic: every
+    probe submitted after update() returns must serve the post-delta
+    graph, bit-matching a fresh rebuild of the tracked adjacency."""
+    adjs = _graphs([90, 70], seed=17)
+    x_tracked = rng.standard_normal((adjs[0].shape[0], 8)).astype(np.float32)
+    x_noise = rng.standard_normal((adjs[1].shape[0], 8)).astype(np.float32)
+    eng, params, cfg = _engine(max_wave_delay_ms=5.0)
+    eng.start()
+    stop_noise = threading.Event()
+    noise_done = []
+
+    def noise():
+        i = 10_000
+        while not stop_noise.is_set():
+            r = eng.submit(
+                GraphRequest(rid=i, adj=adjs[1], x=x_noise, model="gcn")
+            )
+            noise_done.append(r)
+            i += 1
+            time.sleep(0.002)
+
+    t = threading.Thread(target=noise, daemon=True)
+    try:
+        eng.submit(
+            GraphRequest(
+                rid=0, adj=adjs[0], x=x_tracked, model="gcn", graph_id="g"
+            )
+        ).result(timeout=60)
+        t.start()
+        for k in range(4):
+            delta = _value_update(
+                eng.tracked_adj("g"), [k, k + 3], 0.25 + 0.1 * k
+            )
+            eng.update("g", delta)  # control message: applied between waves
+            snapshot = eng.tracked_adj("g")
+            probe = eng.submit(
+                GraphRequest(rid=100 + k, x=x_tracked, model="gcn",
+                             graph_id="g")
+            )
+            np.testing.assert_allclose(
+                probe.result(timeout=60),
+                _reference(params, cfg, snapshot, x_tracked),
+                atol=1e-5, rtol=1e-5,
+            )
+    finally:
+        stop_noise.set()
+        t.join(timeout=30)
+        eng.stop(timeout=60)
+    for r in noise_done:
+        np.testing.assert_allclose(
+            r.result(timeout=60),
+            _reference(params, cfg, adjs[1], x_noise),
+            atol=1e-5, rtol=1e-5,
+        )
+    m = eng.metrics()
+    assert m["graph_updates"] == 4
+    assert m["plan_cache_revalidated"] >= 4  # deltas patched, not rebuilt
+
+
+def test_update_applies_inline_when_loop_stopped(rng):
+    adjs = _graphs([90], seed=19)
+    x = rng.standard_normal((adjs[0].shape[0], 8)).astype(np.float32)
+    eng, params, cfg = _engine()
+    eng.submit(GraphRequest(rid=0, adj=adjs[0], x=x, model="gcn",
+                            graph_id="g"))
+    eng.run()
+    key = eng.update("g", _value_update(eng.tracked_adj("g"), [0, 1], 0.5))
+    assert isinstance(key, str) and key
+    req = eng.submit(GraphRequest(rid=1, x=x, model="gcn", graph_id="g"))
+    eng.run()
+    np.testing.assert_allclose(
+        req.out, _reference(params, cfg, eng.tracked_adj("g"), x),
+        atol=1e-5, rtol=1e-5,
+    )
+
+
+def test_update_error_propagates_through_control(rng):
+    adjs = _graphs([90], seed=21)
+    x = rng.standard_normal((adjs[0].shape[0], 8)).astype(np.float32)
+    eng, _, _ = _engine()
+    eng.start()
+    try:
+        eng.submit(GraphRequest(rid=0, adj=adjs[0], x=x, model="gcn",
+                                graph_id="g")).result(timeout=60)
+        with pytest.raises(Exception):  # check_delta admission failure
+            eng.update("g", DeltaBatch.of(inserts=[(10**6, 0, 1.0)]))
+    finally:
+        eng.stop(timeout=30)
+    assert eng.metrics()["graph_updates"] == 0  # nothing applied
+
+
+# ---------------------------------------------------------------------------
+# metrics surface
+# ---------------------------------------------------------------------------
+def test_metrics_async_fields(rng):
+    adjs = _graphs([60, 90], seed=23)
+    xs = _features(rng, adjs, 8)
+    eng, _, _ = _engine()
+    eng.start()
+    try:
+        for i, (a, x) in enumerate(zip(adjs, xs)):
+            eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+        assert eng.wait_idle(timeout=60)
+        assert eng.metrics()["async_running"]
+    finally:
+        eng.stop(timeout=30)
+    m = eng.metrics()
+    assert not m["async_running"]
+    assert m["waves"] >= 1 and 0 < m["wave_fill"] <= 1
+    assert m["shed"] == 0 and m["rejected"] == 0
+    assert m["queue_depth"] == 0 and m["queue_depth_by_group"] == {}
+    assert m["latency_count"] == 2
+    assert m["latency_p50_s"] > 0 and m["latency_p99_s"] >= m["latency_p50_s"]
+    assert m["service_ema_s"]["gcn"] > 0
+    # launches count non-empty kernel launches: at least one segment per
+    # wave, times the model's layer count
+    assert m["launches"] >= m["batches"]
+
+
+def test_queue_depth_by_group_buckets(rng):
+    adjs = _graphs([60, 600], seed=25)
+    xs = _features(rng, adjs, 8)
+    eng, _, _ = _engine()
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+    groups = eng.metrics()["queue_depth_by_group"]
+    assert sum(groups.values()) == 2
+    assert len(groups) == 2  # 60 and 600 nodes land in different buckets
+    assert all(k.startswith("gcn:n") for k in groups)
+    eng.run()
+    assert eng.metrics()["queue_depth_by_group"] == {}

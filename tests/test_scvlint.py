@@ -243,6 +243,51 @@ def test_scv006_scoped_to_stream_package():
 
 
 # ---------------------------------------------------------------------------
+# SCV007 — self.queue ownership in serve/
+# ---------------------------------------------------------------------------
+def test_scv007_direct_queue_mutation_flagged():
+    src = (
+        "class Engine:\n"
+        "    def __init__(self):\n"
+        "        self.queue = []\n"
+        "    def submit(self, req):\n"
+        "        self.queue.append(req)\n"
+        "    def take(self):\n"
+        "        self.queue = self.queue[2:]\n"
+        "    def restore(self, batch):\n"
+        "        self.queue[:0] = batch\n"
+        "    def drop(self):\n"
+        "        del self.queue[0]\n"
+    )
+    assert sorted(_rules(src, "src/repro/serve/other_engine.py"),
+                  key=lambda rl: rl[1]) == [
+        ("SCV007", 3), ("SCV007", 5), ("SCV007", 7), ("SCV007", 9),
+        ("SCV007", 11),
+    ]
+
+
+def test_scv007_scoped_to_serve_outside_scheduler():
+    # the scheduler/intake module owns the queue — exempt by design
+    src = "class S:\n    def __init__(self):\n        self.queue = []\n"
+    assert _rules(src, "src/repro/serve/scheduler.py") == []
+    # outside serve/ other queues are unrelated
+    assert _rules(src, "src/repro/train/loop.py") == []
+    assert _rules(src, "tests/test_serve_graph.py") == []
+    # reads and non-mutating calls don't fire; neither does someone
+    # else's queue attribute
+    clean = (
+        "class Engine:\n"
+        "    def peek(self):\n"
+        "        return self.queue[0]\n"
+        "    def depth(self):\n"
+        "        return len(self.queue)\n"
+        "    def relay(self):\n"
+        "        self.scheduler.queue.put(1)\n"
+    )
+    assert _rules(clean, "src/repro/serve/graph_engine.py") == []
+
+
+# ---------------------------------------------------------------------------
 # pragmas, baseline, CLI
 # ---------------------------------------------------------------------------
 def test_pragma_suppression():
@@ -287,6 +332,7 @@ def test_main_exit_codes(tmp_path):
 def test_rules_registry_complete():
     assert set(RULES) == {
         "SCV001", "SCV002", "SCV003", "SCV004", "SCV005", "SCV006",
+        "SCV007",
     }
 
 

@@ -169,7 +169,11 @@ def test_engine_repeat_stream_hits_cache(rng):
     assert m["plan_cache_misses"] == 3
     assert m["plan_cache_hits"] >= 2
     assert m["plan_cache_hit_rate"] > 0.3
-    assert m["launches"] == 3
+    assert m["batches"] == 3
+    # launches counts actual kernel launches: one per non-empty capacity
+    # segment of the composite, times the model's layer count per wave
+    assert m["launches"] % m["batches"] == 0
+    assert m["launches"] // m["batches"] >= 2  # n_layers=2, >=1 segment
 
 
 def test_engine_batches_bounded(rng):
@@ -180,7 +184,7 @@ def test_engine_batches_bounded(rng):
         eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
     done = eng.run()
     assert len(done) == 5
-    assert eng.metrics()["launches"] == 3  # ceil(5/2)
+    assert eng.metrics()["batches"] == 3  # ceil(5/2)
 
 
 def test_engine_node_budget_counts_aligned_footprint(rng):
@@ -192,7 +196,34 @@ def test_engine_node_budget_counts_aligned_footprint(rng):
     for i, (a, x) in enumerate(zip(adjs, xs)):
         eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
     eng.run()
-    assert eng.metrics()["launches"] == 2
+    assert eng.metrics()["batches"] == 2
+
+
+def test_engine_launch_count_single_cap(rng):
+    # single-cap plans: exactly one kernel launch per aggregation, and the
+    # gcn forward aggregates once per layer -> launches = batches * n_layers
+    adjs = _graphs([60, 90], seed=33)
+    xs = _features(rng, adjs, 8)
+    eng, _, cfg = _engine(bucket_caps=())
+    for i, (a, x) in enumerate(zip(adjs, xs)):
+        eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
+    eng.run()
+    m = eng.metrics()
+    assert m["batches"] == 1
+    assert m["launches"] == cfg.n_layers
+
+
+def test_plan_launches_counts_nonempty_segments():
+    from repro.serve.graph_engine import plan_launches
+
+    adj = _graphs([120], seed=35)[0]
+    g_single = build_graph(adj, tile=64, backend_cap=64)
+    assert plan_launches(g_single.plan) == 1
+    g_bucketed = build_graph(adj, tile=64, bucket_caps=(8, 32, 128))
+    segs = g_bucketed.plan.segments
+    expect = sum(1 for s in segs if int(np.asarray(s.tile_row).size) > 0)
+    assert plan_launches(g_bucketed.plan) == expect
+    assert 1 <= expect <= 3
 
 
 def test_engine_config_rejects_nonpositive_limits():
@@ -330,7 +361,7 @@ def test_engine_node_budget_splits_batches(rng):
     for i, (a, x) in enumerate(zip(adjs, xs)):
         eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn"))
     eng.run()
-    assert eng.metrics()["launches"] == 3  # each graph alone busts the budget
+    assert eng.metrics()["batches"] == 3  # each graph alone busts the budget
 
 
 def test_engine_rejects_bad_requests(rng):
@@ -433,7 +464,7 @@ def test_engine_interrupt_consumes_no_retries(rng, monkeypatch):
     def boom(*a, **kw):
         raise KeyboardInterrupt
 
-    monkeypatch.setattr(ge, "gnn_forward_batched", boom)
+    monkeypatch.setattr(ge, "gnn_forward_jit", boom)
     with pytest.raises(KeyboardInterrupt):
         eng.run()
     assert sorted(r.rid for r in eng.queue) == [0, 1]
@@ -711,6 +742,6 @@ def test_engine_mixed_model_kinds_batch_separately(rng):
         eng.submit(GraphRequest(rid=i, adj=a, x=x, model="gcn" if i % 2 else "gin"))
     done = eng.run()
     assert len(done) == 4
-    assert eng.metrics()["launches"] == 2  # one per kind
+    assert eng.metrics()["batches"] == 2  # one per kind
     for r in done:
         assert r.out.shape == (40, 4) and np.isfinite(r.out).all()

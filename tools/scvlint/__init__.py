@@ -46,6 +46,16 @@ Rules (all stdlib ``ast`` + ``tokenize``; no third-party dependency):
   sub-rebuild time; a rebuild call hiding inside it silently converts
   the O(delta) contract back into the O(nnz) path it replaces.  Tests
   and benchmarks rebuild freely — the rule is scoped to the package.
+* **SCV007 queue-ownership** — no direct ``self.queue`` mutation inside
+  ``src/repro/serve/`` outside the scheduler/intake module
+  (``serve/scheduler.py``).  The intake queue is the single place where
+  admission control, backpressure, and deadline accounting happen; an
+  append or slice-assignment that bypasses it silently exempts those
+  requests from every admission policy.  Both rebinding
+  (``self.queue = ...``, slice/index assignment, ``del``) and mutating
+  method calls (``append`` / ``extend`` / ``pop`` / ...) fire.  The
+  legacy LM ``serve/engine.py`` loop predates the rule and is
+  baselined.
 
 Suppression: append ``# scvlint: ignore[SCV00N]`` (or a bare
 ``# scvlint: ignore``) to the offending line.  Pre-existing violations
@@ -74,7 +84,15 @@ RULES = {
     "SCV004": "jax import shim lacks a version-pin audit comment",
     "SCV005": "fori_loop(unroll=) raises with traced bounds",
     "SCV006": "full plan rebuild called inside src/repro/stream/",
+    "SCV007": "direct self.queue mutation outside the scheduler/intake module",
 }
+
+#: Mutating container methods that bypass intake admission when called on
+#: ``self.queue`` directly (SCV007).
+QUEUE_MUTATORS = frozenset(
+    {"append", "extend", "insert", "pop", "remove", "clear", "sort",
+     "reverse", "appendleft", "popleft"}
+)
 
 #: Full-rebuild entry points the stream/ delta package must never call
 #: (SCV006) — patching that falls back to a rebuild is a silent
@@ -252,6 +270,7 @@ class FileChecker:
         self._check_shim_hygiene(tree, out)
         self._check_fori_unroll(tree, out)
         self._check_stream_no_rebuild(tree, out)
+        self._check_queue_ownership(tree, out)
         return out
 
     # -- SCV001 ------------------------------------------------------------
@@ -460,6 +479,52 @@ class FileChecker:
                     "patches plans in O(delta); splice the change in "
                     "instead of rebuilding",
                 )
+
+    # -- SCV007 ------------------------------------------------------------
+    def _check_queue_ownership(self, tree: ast.Module, out: list[Violation]):
+        rel = self.rel.replace("\\", "/")
+        if "repro/serve/" not in rel or rel.endswith("serve/scheduler.py"):
+            return
+
+        def root_is_self_queue(node: ast.AST) -> bool:
+            # peel subscripts: `self.queue[0] = ...`, `del self.queue[:]`
+            while isinstance(node, ast.Subscript):
+                node = node.value
+            return (
+                isinstance(node, ast.Attribute)
+                and node.attr == "queue"
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+            )
+
+        msg = (
+            "direct `self.queue` mutation bypasses intake admission "
+            "(backpressure, deadline accounting) — go through "
+            "serve.scheduler.IntakeQueue"
+        )
+        for node in ast.walk(tree):
+            targets: list[ast.AST] = []
+            if isinstance(node, ast.Assign):
+                targets = list(node.targets)
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            elif isinstance(node, ast.Delete):
+                targets = list(node.targets)
+            for t in targets:
+                subs = (
+                    list(ast.walk(t))
+                    if isinstance(t, (ast.Tuple, ast.List)) else [t]
+                )
+                if any(root_is_self_queue(s) for s in subs):
+                    self._emit(out, node, "SCV007", msg)
+                    break
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in QUEUE_MUTATORS
+                and root_is_self_queue(node.func.value)
+            ):
+                self._emit(out, node, "SCV007", msg)
 
 
 # ---------------------------------------------------------------------------
